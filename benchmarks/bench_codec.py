@@ -1,0 +1,119 @@
+"""Codec-path benchmarks: transform throughput, GD/zlib/zstd sizing,
+checkpoint save/restore, kernel micro-timings (interpret-mode noted)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compression.gd import gd_compress, gd_decompress
+from repro.compression.greedy_gd import greedy_gd_compress
+from repro.core import pipeline, transforms as T
+from repro.core.lossless import significand_int
+from repro.data import gas_turbine_emissions
+
+
+def _timeit(fn, n=3):
+    fn()  # warm
+    t0 = time.time()
+    for _ in range(n):
+        fn()
+    return (time.time() - t0) / n * 1e6  # us
+
+
+def bench_transforms(rows: list):
+    x = gas_turbine_emissions(100_000)
+    y, e, s = __import__("repro.core.float_bits", fromlist=["x"]).normalize_to_binade(
+        jnp.asarray(x)
+    )
+    X = significand_int(y)
+    for name, fn in [
+        ("compact_bins", lambda: T.compact_bins_forward(X, 16)),
+        ("multiply_shift", lambda: T.multiply_shift_forward(X, 2, max_iter=64)),
+        ("shift_save_even", lambda: T.shift_save_even_forward(X, 16)),
+    ]:
+        us = _timeit(fn)
+        mbps = x.nbytes / (us / 1e6) / 1e6
+        rows.append((f"transform_{name}_100k", us, f"{mbps:.0f} MB/s fwd"))
+
+    enc = pipeline.encode(x[:10_000])
+    us = _timeit(lambda: pipeline.encode(x[:10_000]))
+    rows.append(("pipeline_encode_auto_10k", us, f"picked={enc.method}"))
+    us = _timeit(lambda: pipeline.decode(enc))
+    rows.append(("pipeline_decode_10k", us, "bitwise-lossless"))
+
+
+def bench_gd(rows: list):
+    x = gas_turbine_emissions(10_000)
+    us = _timeit(lambda: gd_compress(x))
+    rows.append(("gd_compress_10k", us, f"bits={gd_compress(x).size_bits()}"))
+    c = greedy_gd_compress(x)
+    us = _timeit(lambda: greedy_gd_compress(x), n=1)
+    rows.append(("greedy_gd_select+compress_10k", us, f"bits={c.size_bits()}"))
+    us = _timeit(lambda: gd_decompress(c))
+    rows.append(("gd_decompress_10k", us, ""))
+
+
+def bench_kernels(rows: list):
+    """Pallas kernels in interpret mode (CPU container; TPU is the target —
+    these timings validate plumbing, not TPU perf)."""
+    from repro.kernels.bitplane_transpose.ops import to_bitplanes
+    from repro.kernels.mshift.ops import mshift
+    from repro.kernels.sharedbits.ops import shared_mask_u32
+
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.integers(0, 2**32, 256 * 32, dtype=np.uint32))
+    us = _timeit(lambda: jax.block_until_ready(to_bitplanes(w)))
+    rows.append(("pallas_bitplane_transpose_8k(interp)", us, "vs ref in tests"))
+
+    x = jnp.asarray(rng.integers(1 << 23, (1 << 23) + (1 << 12), 128 * 128),
+                    jnp.int32)
+    us = _timeit(lambda: jax.block_until_ready(mshift(x, 4, 16)))
+    rows.append(("pallas_mshift_16k(interp)", us, "fused iterations"))
+
+    us = _timeit(lambda: jax.block_until_ready(shared_mask_u32(w)))
+    rows.append(("pallas_sharedbits_8k(interp)", us, ""))
+
+
+def bench_checkpoint(rows: list):
+    import tempfile
+
+    from repro.checkpoint import save_tree, restore_tree
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config("minicpm_2b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with tempfile.TemporaryDirectory() as d:
+        t0 = time.time()
+        stats = save_tree(params, f"{d}/ck")
+        us = (time.time() - t0) * 1e6
+        rows.append(("checkpoint_save_reduced_model", us,
+                     f"ratio={stats['ratio']:.3f}"))
+        t0 = time.time()
+        restore_tree(f"{d}/ck")
+        rows.append(("checkpoint_restore_reduced_model",
+                     (time.time() - t0) * 1e6, "bitwise"))
+
+
+def bench_grad_compress(rows: list):
+    from repro.distributed.compress import bucket_report
+
+    rng = np.random.default_rng(1)
+    # gradient-like bucket: heavy-tailed, shared exponent structure
+    g = (rng.standard_normal(1 << 18) * 1e-3).astype(np.float32)
+    t0 = time.time()
+    rep = bucket_report(g)
+    rows.append(("grad_bucket_compress_256k", (time.time() - t0) * 1e6,
+                 f"ratio={rep['ratio']:.3f} method={rep['method']}"))
+
+
+def run(rows: list):
+    bench_transforms(rows)
+    bench_gd(rows)
+    bench_kernels(rows)
+    bench_checkpoint(rows)
+    bench_grad_compress(rows)

@@ -1,0 +1,183 @@
+"""Roofline report (§Roofline of EXPERIMENTS.md).
+
+Two sources, cross-checked:
+
+1. **HLO-observed** (results/dryrun_*.json, from `compiled.cost_analysis()`
+   + collective ops parsed out of `compiled.as_text()`): exact shapes and
+   collective schedule, but XLA:CPU's cost model counts `while`/`scan`
+   bodies ONCE (verified: layer-scanned models report ~1/L of the real
+   traffic, and the same model fluctuates between meshes) — so these are
+   used as the *profile* (what ops exist, which collectives, per-op bytes),
+   not as the timing numerator.
+
+2. **Analytic** (this module): first-principles FLOPs/bytes/collective
+   models per (arch x shape) from the configs — the standard napkin-math
+   roofline the §Perf loop optimizes against.  All formulas below are
+   explicit and unit-tested against param counts.
+
+Terms (per chip, seconds):
+  compute   = executed_flops / (chips * 197e12)
+  memory    = hbm_bytes      / (chips * 819e9)
+  collective= coll_bytes     / (chips * 50e9)
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+SHAPE_DEF = {
+    "train_4k": ("train", 4096, 256),
+    "prefill_32k": ("prefill", 32768, 32),
+    "decode_32k": ("decode", 32768, 128),
+    "long_500k": ("decode", 524288, 1),
+}
+
+
+def param_counts(arch: str) -> tuple[int, int]:
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    pshape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    total = active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(pshape)[0]:
+        n = int(np.prod(leaf.shape))
+        total += n
+        keys = "/".join(str(getattr(k, "key", k)) for k in path)
+        if cfg.is_moe and "/ffn/w" in keys and "shared" not in keys:
+            active += n * cfg.top_k // max(cfg.n_experts, 1)
+        else:
+            active += n
+    return total, active
+
+
+def analytic_cell(arch: str, shape: str, n_dev: int, dp: int, tp: int) -> dict:
+    """Global FLOPs / HBM bytes / cross-chip collective bytes for one cell.
+
+    Notation: N=active params, T=tokens processed, B=batch, S=seq,
+    L=layers, D=d_model.  Formulas:
+
+    train:   flops  = 8*N*T            (fwd 2NT + bwd 4NT + remat fwd 2NT)
+             + attn: 12*B*S^2*H*dh     (QK^T+PV fwd=4, x3 for bwd+remat)
+             bytes  = 20*N             (p r/w f32, m/v r/w f32 = 4*5)
+             + activations: L*B*S*D*2B*8 (8 r/w per layer, bf16, remat-aware)
+             coll   = grad reduce-scatter+all-gather: 2*4*N*(dp-1)/dp
+             + TP activation psum: 4*2*B*S*D*2B*L / tp ... counted per chip
+    prefill: flops  = 2*N*T + 4*B*S^2*H*dh ; bytes = 2*N + acts; coll = TP
+    decode:  flops  = 2*N*B ; bytes = 2*N + kv_cache read ; coll = TP token
+    """
+    cfg = get_config(arch)
+    kind, S, B = SHAPE_DEF[shape]
+    n_total, n_active = param_counts(arch)
+    L, D, H, dh, hkv = cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.n_kv
+    T = B * S if kind != "decode" else B
+
+    # attention score flops (full attention archs; ssm/linear ~ linear in S)
+    if cfg.family in ("rwkv",):
+        attn_fwd = 4 * B * S * H * dh * dh  # state update per token
+        kv_bytes = 0
+    elif cfg.family == "zamba":
+        n_apps = 6 if cfg.attn_every == 12 else max(1, L // ((cfg.attn_every or 12) + 1))
+        attn_fwd = 4 * B * S * S * H * dh * n_apps / max(L, 1)
+        attn_fwd = 4 * B * S * S * H * dh * n_apps  # shared-attn apps only
+        kv_bytes = 2 * n_apps * B * S * hkv * dh * 2
+    else:
+        eff_L = L
+        attn_fwd = 4 * B * S * S * H * dh * eff_L / 2  # /2 causal
+        kv_bytes = 2 * L * B * S * hkv * dh * 2
+
+    if kind == "train":
+        flops = 8.0 * n_active * T + 3 * attn_fwd
+        act_bytes = L * B * S * D * 2 * 8
+        bytes_ = 20.0 * n_total + act_bytes
+        coll = 2 * 4.0 * n_active * (dp - 1) / dp * 2  # rs+ag on grads+params(fsdp)
+        coll += 4 * 2.0 * B * S * D * 2 * L / max(tp, 1) * (tp > 1)
+    elif kind == "prefill":
+        flops = 2.0 * n_active * T + attn_fwd
+        act_bytes = L * B * S * D * 2 * 6
+        bytes_ = 2.0 * n_total + act_bytes
+        coll = 2 * 2.0 * B * S * D * 2 * L * (tp > 1)
+    else:  # decode
+        if cfg.family == "rwkv":
+            state_bytes = L * B * H * dh * dh * 4 * 2
+            kv_bytes = state_bytes
+        elif cfg.family == "zamba":
+            state_bytes = 75 * B * 2 * D * cfg.ssm_state * 4 * 2
+            kv_bytes = kv_bytes + state_bytes
+        flops = 2.0 * n_active * B + (kv_bytes / 2)  # score flops ~ kv reads
+        bytes_ = 2.0 * n_total + kv_bytes
+        coll = 2 * 2.0 * B * D * 2 * L * (tp > 1)
+
+    return {
+        "flops": flops,
+        "bytes": bytes_,
+        "coll_bytes": coll,
+        "terms": {
+            "compute": flops / n_dev / PEAK_FLOPS,
+            "memory": bytes_ / n_dev / HBM_BW,
+            "collective": coll / n_dev / LINK_BW,
+        },
+        "model_flops": (6.0 if kind == "train" else 2.0) * n_active * T,
+    }
+
+
+def load(mesh: str) -> list[dict]:
+    p = RESULTS / f"dryrun_{mesh}.json"
+    return json.loads(p.read_text()) if p.exists() else []
+
+
+def report(rows: list | None = None, mesh: str = "16x16"):
+    entries = load(mesh)
+    n_dev = 512 if mesh == "2x16x16" else 256
+    dp = 32 if mesh == "2x16x16" else 16
+    tp = 16
+    out = [
+        f"{'arch':24}{'shape':13}{'dom':>5}{'comp_ms':>9}{'mem_ms':>9}"
+        f"{'coll_ms':>9}{'roofline%':>10}{'hlo_coll_ms':>12}"
+    ]
+    for r in entries:
+        if "skipped" in r:
+            out.append(f"{r['arch']:24}{r['shape']:13} SKIP")
+            continue
+        if "error" in r:
+            out.append(f"{r['arch']:24}{r['shape']:13} ERROR")
+            continue
+        a = analytic_cell(r["arch"], r["shape"], n_dev, dp, tp)
+        t = a["terms"]
+        dom = max(t, key=t.get)
+        bound = max(t.values())
+        # roofline fraction: useful model flops time / achievable bound
+        frac = (a["model_flops"] / n_dev / PEAK_FLOPS) / bound if bound else 0
+        hlo_coll = r["roofline_seconds"]["collective"] * 1e3
+        out.append(
+            f"{r['arch']:24}{r['shape']:13}{dom[:4]:>5}"
+            f"{t['compute']*1e3:9.2f}{t['memory']*1e3:9.2f}"
+            f"{t['collective']*1e3:9.2f}{frac*100:10.1f}{hlo_coll:12.2f}"
+        )
+        if rows is not None:
+            rows.append((
+                f"roofline_{mesh}_{r['arch']}_{r['shape']}",
+                bound * 1e6,
+                f"dom={dom} roofline_frac={frac*100:.1f}%",
+            ))
+    return "\n".join(out)
+
+
+def run(rows: list):
+    for mesh in ("16x16", "2x16x16"):
+        txt = report(rows, mesh)
+        print(f"\n--- analytic roofline {mesh} (hlo collective as profile) ---")
+        print(txt)
+
+
+if __name__ == "__main__":
+    run([])

@@ -1,0 +1,31 @@
+"""Benchmark harness entry point — one module per paper table/figure plus
+framework-path benches.  Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--only paper|codec|roofline]
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=[None, "paper", "codec",
+                                                     "roofline"])
+    args = ap.parse_args()
+    rows = []
+    if args.only in (None, "paper"):
+        from benchmarks import bench_paper
+        bench_paper.run(rows)
+    if args.only in (None, "codec"):
+        from benchmarks import bench_codec
+        bench_codec.run(rows)
+    if args.only in (None, "roofline"):
+        from benchmarks import roofline
+        roofline.run(rows)
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == '__main__':
+    main()

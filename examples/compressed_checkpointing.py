@@ -1,0 +1,46 @@
+"""The paper's technique as framework infrastructure: compress a real model
+checkpoint (params + Adam moments) losslessly, restore it bitwise, report
+per-array transform choices and ratios.
+
+  PYTHONPATH=src python examples/compressed_checkpointing.py
+"""
+import json
+import tempfile
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.checkpoint import restore_tree, save_tree
+from repro.configs import get_config
+from repro.models import build_model
+from repro.optim import adamw_init
+
+cfg = get_config("granite_moe_1b_a400m", reduced=True)
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+opt = adamw_init(params)
+tree = {"params": params, "m": opt.m, "v": opt.v}
+
+with tempfile.TemporaryDirectory() as d:
+    stats = save_tree(tree, Path(d) / "ck")
+    print(f"raw:        {stats['raw_bytes']:>12,} bytes")
+    print(f"compressed: {stats['comp_bytes']:>12,} bytes")
+    print(f"ratio:      {stats['ratio']:.3f}  (lossless)")
+
+    manifest = json.loads((Path(d) / "ck" / "manifest.json").read_text())
+    methods = {}
+    for rec in manifest["arrays"]:
+        for m in rec["methods"]:
+            methods[m] = methods.get(m, 0) + 1
+    print(f"transform choices across array chunks: {methods}")
+
+    back, _ = restore_tree(Path(d) / "ck")
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        a = np.asarray(a)
+        b = np.asarray(b)
+        assert a.dtype == b.dtype and a.shape == b.shape
+        assert np.array_equal(
+            a.view(np.uint8), b.view(np.uint8)
+        ), "restore must be bitwise identical"
+    print("restore: BITWISE IDENTICAL ✓ (training trajectory unchanged)")

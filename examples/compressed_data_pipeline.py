@@ -1,0 +1,27 @@
+"""Compressed float shard store with random access — the paper's GD
+random-access property in the data pipeline.
+
+  PYTHONPATH=src python examples/compressed_data_pipeline.py
+"""
+import tempfile
+
+import numpy as np
+
+from repro.data import gas_turbine_emissions
+from repro.data.shard_store import ShardStore
+
+x = gas_turbine_emissions(200_000).reshape(20, 10_000)
+
+with tempfile.TemporaryDirectory() as d:
+    store = ShardStore(d)
+    manifest = store.write("sensor", x, chunk=32_768)
+    print(f"wrote {len(manifest['chunks'])} chunks, "
+          f"ratio={store.ratio('sensor'):.3f}")
+    # random access: decode chunk 2 only
+    c2 = store.read_chunk("sensor", 2)
+    want = x.reshape(-1)[2 * 32_768 : 3 * 32_768]
+    assert np.array_equal(c2, want)
+    print("random-access chunk read: OK")
+    back = store.read("sensor")
+    assert np.array_equal(back.view(np.uint64), x.view(np.uint64))
+    print("full read: BITWISE IDENTICAL ✓")

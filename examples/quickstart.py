@@ -1,0 +1,32 @@
+"""Quickstart: the paper's technique end-to-end in 40 lines.
+
+Takes an IoT-like float64 time series, picks the best lossless transform,
+compresses with GreedyGD, verifies bitwise round-trip, prints δ_CR.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.compression.metrics import evaluate, size_fn_for
+from repro.core import pipeline
+from repro.data import chicago_taxi_fares
+
+x = chicago_taxi_fares(1000)
+print(f"dataset: {x.size} float64 samples, {x.nbytes} bytes raw")
+
+# 1. choose + apply the best lossless transform (verified round-trip)
+enc = pipeline.encode(x, size_fn=size_fn_for("greedy_gd"))
+print(f"chosen transform: {enc.method} {enc.params}")
+print(f"transform metadata: {enc.metadata_bytes()} bytes")
+
+# 2. compression with and without preprocessing (paper Eq. 1/12)
+rep = evaluate(x, enc, compressor="greedy_gd")
+print(f"CR without preprocessing: {rep.cr_noprep:.4f}")
+print(f"CR with    preprocessing: {rep.cr_prep:.4f}")
+print(f"delta_CR: {rep.delta_cr:+.2%}  (negative = better, paper reports up to -40%)")
+print(f"shared bits S_TOT: {rep.shared_before['S_TOT']} -> {rep.shared_after['S_TOT']}")
+
+# 3. losslessness: decode and compare BITWISE
+back = pipeline.decode(enc)
+assert np.array_equal(back.view(np.uint64), x.view(np.uint64))
+print("round-trip: BITWISE IDENTICAL ✓")

@@ -1,0 +1,19 @@
+"""Batched serving example: prefill + greedy decode on the attention-free
+rwkv6 family (state-space cache, O(1) memory in context length).
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+import sys
+
+from repro.launch import serve
+
+
+def main():
+    return serve.main([
+        "--arch", "rwkv6-3b", "--reduced",
+        "--batch", "4", "--prompt-len", "64", "--gen-len", "16",
+    ])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

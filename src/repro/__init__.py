@@ -1,0 +1,11 @@
+"""repro: lossless float preprocessing for compression, integrated in a JAX training stack.
+
+The paper's transforms operate on IEEE-754 binary64, so we enable x64 globally.
+All model / distributed code keeps EXPLICIT f32/bf16/int32 dtypes; tests assert
+that no f64 leaks into model graphs (see tests/test_models.py).
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "1.0.0"

@@ -1,0 +1,213 @@
+"""Fault-tolerant compressed checkpointing — the paper's codec as the
+checkpoint-at-rest layer.
+
+Properties (the large-scale-runnability contract):
+ * **Lossless**: every array round-trips bitwise (core.pipeline verifies
+   each chunk's inverse before shipping) — restore continues the exact
+   training trajectory.  f32/f64 arrays go through the paper's transforms;
+   bf16 via the BF16 FloatSpec; int arrays via zlib.
+ * **Atomic**: writes go to `step_<n>.tmp/` then `os.replace` to
+   `step_<n>/` — a preemption mid-write never corrupts the latest
+   checkpoint (two-phase commit).
+ * **Elastic**: arrays are stored as full LOGICAL arrays (host-gathered),
+   independent of the device mesh — restore onto any mesh shape, then
+   reshard with the target sharding rules (tested in test_checkpoint.py).
+ * **Self-describing**: manifest.json carries the pytree structure, step,
+   data-pipeline cursor and compression stats (per-array method + ratio).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import shutil
+import zlib
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from ..core import pipeline
+from ..core.float_bits import BF16, F32, F64
+
+_FLOAT_SPECS = {"float64": F64, "float32": F32, "bfloat16": BF16}
+CHUNK = 1 << 18
+
+# §Perf C: checkpoint arrays are weights/moments — the iterative transforms
+# (ms/ssep) essentially never win there but cost the most to try; restrict
+# the candidate grid to the cheap-and-effective set.
+_CKPT_CANDIDATES = (
+    ("identity", {}),
+    ("compact_bins", {"n_bins": 16}),
+    ("shift_save_even", {"D": 8}),
+    ("shift_save_even", {"D": 16}),
+    ("shift_save_even", {"D": 24}),
+)
+
+
+def _encode_array(x: np.ndarray, method: str = "auto") -> dict:
+    """-> {kind, blobs, meta}; floats via the paper codec, ints via zlib."""
+    dt = x.dtype
+    if dt == np.dtype("V2"):  # bfloat16 viewed
+        dt = jax.numpy.bfloat16.dtype
+    name = str(dt)
+    if name in _FLOAT_SPECS:
+        flat = np.asarray(x).reshape(-1)
+        blobs = []
+        methods = []
+        # §Perf C: pick the transform ONCE per array (sampled), reuse for
+        # every chunk; per-chunk fallback to identity on domain failure.
+        per_chunk_method = method
+        per_chunk_params = None
+        if method == "auto" and flat.size > 16384:
+            probe = pipeline.encode(
+                flat[:: max(1, flat.size // 8192)][:8192],
+                method="auto", spec=_FLOAT_SPECS[name],
+                candidates=_CKPT_CANDIDATES,
+            )
+            per_chunk_method = probe.method
+            per_chunk_params = probe.params
+        for i in range(0, max(flat.size, 1), CHUNK):
+            seg = flat[i : i + CHUNK]
+            if seg.size == 0:
+                break
+            try:
+                if per_chunk_method == "auto":
+                    enc = pipeline.encode(
+                        seg, method="auto", spec=_FLOAT_SPECS[name],
+                        candidates=_CKPT_CANDIDATES,
+                    )
+                else:
+                    enc = pipeline.encode(
+                        seg, method=per_chunk_method, params=per_chunk_params,
+                        spec=_FLOAT_SPECS[name],
+                    )
+            except Exception:
+                enc = pipeline.encode(
+                    seg, method="identity", spec=_FLOAT_SPECS[name]
+                )
+            blobs.append(zlib.compress(pickle.dumps(enc), 6))
+            methods.append(enc.method)
+        return {"kind": "float", "blobs": blobs, "methods": methods}
+    raw = np.ascontiguousarray(x).tobytes()
+    return {"kind": "raw", "blobs": [zlib.compress(raw, 6)], "methods": ["zlib"]}
+
+
+def _decode_array(rec: dict, shape, dtype) -> np.ndarray:
+    if rec["kind"] == "float":
+        parts = [
+            pipeline.decode(pickle.loads(zlib.decompress(b))).reshape(-1)
+            for b in rec["blobs"]
+        ]
+        flat = np.concatenate(parts) if parts else np.zeros(0, dtype)
+        return flat.reshape(shape)
+    raw = zlib.decompress(rec["blobs"][0])
+    return np.frombuffer(raw, dtype).reshape(shape).copy()
+
+
+def save_tree(tree, directory: str | Path, extra: dict | None = None,
+              method: str = "auto") -> dict:
+    """Atomically write a pytree; returns compression stats."""
+    directory = Path(directory)
+    tmp = directory.with_suffix(".tmp")
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    leaves, treedef = jax.tree.flatten(tree)
+    stats, index = [], []
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        rec = _encode_array(arr, method)
+        blob_path = tmp / f"arr_{i}.bin"
+        with open(blob_path, "wb") as f:
+            for b in rec["blobs"]:
+                f.write(len(b).to_bytes(8, "little"))
+                f.write(b)
+        comp = sum(len(b) for b in rec["blobs"])
+        index.append({
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype) if arr.dtype != jax.numpy.bfloat16.dtype
+            else "bfloat16",
+            "kind": rec["kind"],
+            "nblobs": len(rec["blobs"]),
+            "raw": int(arr.nbytes),
+            "comp": comp,
+            "methods": rec["methods"],
+        })
+        stats.append((arr.nbytes, comp))
+    manifest = {
+        "treedef": pickle.dumps(treedef).hex(),
+        "arrays": index,
+        "extra": extra or {},
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if directory.exists():
+        shutil.rmtree(directory)
+    os.replace(tmp, directory)  # atomic commit
+    raw = sum(r for r, _ in stats)
+    comp = sum(c for _, c in stats)
+    return {"raw_bytes": raw, "comp_bytes": comp,
+            "ratio": comp / max(raw, 1)}
+
+
+def restore_tree(directory: str | Path):
+    """-> (pytree of np arrays, extra dict). Mesh-independent."""
+    directory = Path(directory)
+    manifest = json.loads((directory / "manifest.json").read_text())
+    treedef = pickle.loads(bytes.fromhex(manifest["treedef"]))
+    leaves = []
+    for i, rec in enumerate(manifest["arrays"]):
+        blobs = []
+        with open(directory / f"arr_{i}.bin", "rb") as f:
+            for _ in range(rec["nblobs"]):
+                ln = int.from_bytes(f.read(8), "little")
+                blobs.append(f.read(ln))
+        dtype = (
+            jax.numpy.bfloat16.dtype if rec["dtype"] == "bfloat16"
+            else np.dtype(rec["dtype"])
+        )
+        leaves.append(
+            _decode_array(
+                {"kind": rec["kind"], "blobs": blobs}, rec["shape"], dtype
+            )
+        )
+    return jax.tree.unflatten(treedef, leaves), manifest["extra"]
+
+
+class CheckpointManager:
+    """step-numbered checkpoints with retention + latest-step discovery."""
+
+    def __init__(self, root: str | Path, keep: int = 3, method: str = "auto"):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.method = method
+
+    def save(self, step: int, tree, extra: dict | None = None) -> dict:
+        extra = dict(extra or {})
+        extra["step"] = step
+        stats = save_tree(tree, self.root / f"step_{step:08d}", extra, self.method)
+        self._gc()
+        return stats
+
+    def latest_step(self) -> int | None:
+        steps = sorted(
+            int(p.name.split("_")[1]) for p in self.root.glob("step_*")
+            if p.is_dir() and not p.name.endswith(".tmp")
+        )
+        return steps[-1] if steps else None
+
+    def restore_latest(self):
+        s = self.latest_step()
+        if s is None:
+            return None, None
+        return restore_tree(self.root / f"step_{s:08d}")
+
+    def _gc(self):
+        steps = sorted(
+            int(p.name.split("_")[1]) for p in self.root.glob("step_*")
+            if p.is_dir()
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.root / f"step_{s:08d}", ignore_errors=True)

@@ -1,0 +1,19 @@
+"""Compression substrate: bit-plane tools, Generalized Deduplication (GD),
+GreedyGD base-bit selection, CR metrics, and standard-compressor baselines."""
+from .bitplane import (  # noqa: F401
+    bitplanes_to_words,
+    pack_uint_stream,
+    shared_bit_mask,
+    shared_bits_report,
+    unpack_uint_stream,
+    words_to_bitplanes,
+)
+from .gd import GDCompressed, gd_compress, gd_decompress, gd_get, gd_size_bits  # noqa: F401
+from .greedy_gd import greedy_gd_select  # noqa: F401
+from .metrics import (  # noqa: F401
+    CompressionReport,
+    compressed_size_bytes,
+    compression_ratio,
+    delta_cr,
+    evaluate,
+)

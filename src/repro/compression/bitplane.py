@@ -1,0 +1,149 @@
+"""Bit-plane views and shared-bit analysis of float word streams.
+
+``words_to_bitplanes`` is the host/numpy reference for the Pallas
+``bitplane_transpose`` kernel (the GD hot loop): plane p of the output holds
+bit p (MSB-first) of every input word, packed contiguously.  Storing planes
+contiguously puts all "shared" bits of the dataset into runs of identical
+bytes — exactly what the paper's transforms maximize (§1.1, [11]).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.float_bits import FloatSpec, F64
+
+
+def _as_words(x) -> np.ndarray:
+    x = np.asarray(x)
+    if x.dtype.kind == "f":
+        x = x.view({8: np.uint64, 4: np.uint32, 2: np.uint16}[x.dtype.itemsize])
+    elif x.dtype == np.dtype("bfloat16") if hasattr(np, "bfloat16") else False:
+        x = x.view(np.uint16)
+    return x.reshape(-1)
+
+
+def words_to_bitplanes(words) -> np.ndarray:
+    """uint words [n] -> bool [w, n]; plane 0 = MSB (sign for floats)."""
+    w8 = _as_words(words)
+    width = w8.dtype.itemsize * 8
+    # big-endian byte view so unpackbits yields MSB-first planes
+    be = w8.astype(w8.dtype.newbyteorder(">"))
+    bits = np.unpackbits(be.view(np.uint8)).reshape(-1, width)
+    return bits.T.astype(bool)
+
+
+def bitplanes_to_words(planes: np.ndarray, width: int) -> np.ndarray:
+    """Inverse of :func:`words_to_bitplanes`."""
+    bits = planes.astype(np.uint8).T.reshape(-1)
+    by = np.packbits(bits).reshape(-1, width // 8)
+    dt = {64: np.uint64, 32: np.uint32, 16: np.uint16}[width]
+    return by.view(np.dtype(dt).newbyteorder(">")).astype(dt).reshape(-1)
+
+
+def shared_bit_mask(words) -> np.ndarray:
+    """Mask of bit positions shared by ALL words (AND == OR test).
+
+    Returns a word-wide uint mask with 1s where every sample agrees — the
+    quantity the paper's transforms maximize.  Reference for the Pallas
+    ``sharedbits`` reduction kernel.
+    """
+    w = _as_words(words)
+    if w.size == 0:
+        return w.dtype.type(0)
+    a = np.bitwise_and.reduce(w)
+    o = np.bitwise_or.reduce(w)
+    return np.bitwise_not(np.bitwise_xor(a, o))
+
+
+def shared_bits_report(x, spec: FloatSpec = F64) -> dict:
+    """S_M (mantissa), S_E (exponent), sign, S_TOT and leading-run D_M — the
+    quantities plotted in the paper's Fig. 7."""
+    mask = int(shared_bit_mask(_as_words(x)))
+    man = mask & spec.man_mask
+    exp = (mask >> spec.man_bits) & spec.exp_mask
+    sign = (mask >> spec.sign_shift) & 1
+    s_m = bin(man).count("1")
+    s_e = bin(exp).count("1")
+    # leading shared mantissa bits (the paper's D_M-guaranteed region)
+    d_m = 0
+    for i in range(spec.man_bits - 1, -1, -1):
+        if (man >> i) & 1:
+            d_m += 1
+        else:
+            break
+    return {
+        "S_M": s_m,
+        "S_E": s_e,
+        "S_sign": int(sign),
+        "S_TOT": s_m + s_e + int(sign),
+        "D_M_leading": d_m,
+        "mask": mask,
+    }
+
+
+# ---------------------------------------------------------------------------
+# variable-width integer packing (chunk-id metadata serialization)
+# ---------------------------------------------------------------------------
+
+def compress_int_stream(vals: np.ndarray) -> bytes:
+    """Entropy-pack an int stream: best of dense bit-packing and
+    zigzag-delta bit-packing, then zlib.  Used for transform metadata
+    (chunk ids, exponents) — time-series metadata is highly correlated, so
+    delta coding typically wins (paper §3.4's Z trade-off)."""
+    import zlib
+
+    v = np.asarray(vals, np.int64)
+    if v.size == 0:
+        return b"\x00"
+    lo = int(v.min())
+    dense = v - lo
+    width_d = max(1, int(dense.max()).bit_length())
+    cand_d = b"\x01" + np.int64(lo).tobytes() + np.int8(width_d).tobytes() + zlib.compress(
+        pack_uint_stream(dense.astype(np.uint64), width_d), 6
+    )
+    d = np.diff(v, prepend=np.int64(0))
+    zz = ((d << 1) ^ (d >> 63)).astype(np.uint64)
+    width_z = max(1, int(zz.max()).bit_length())
+    cand_z = b"\x02" + np.int8(width_z).tobytes() + zlib.compress(
+        pack_uint_stream(zz, width_z), 6
+    )
+    return min([cand_d, cand_z], key=len)
+
+
+def decompress_int_stream(buf: bytes, n: int) -> np.ndarray:
+    import zlib
+
+    tag = buf[0]
+    if tag == 0:
+        return np.zeros(0, np.int64)
+    if tag == 1:
+        lo = np.frombuffer(buf[1:9], np.int64)[0]
+        width = np.frombuffer(buf[9:10], np.int8)[0]
+        dense = unpack_uint_stream(zlib.decompress(buf[10:]), int(width), n)
+        return dense.astype(np.int64) + lo
+    width = np.frombuffer(buf[1:2], np.int8)[0]
+    zz = unpack_uint_stream(zlib.decompress(buf[2:]), int(width), n).astype(np.int64)
+    d = (zz >> 1) ^ -(zz & 1)
+    return np.cumsum(d).astype(np.int64)
+
+
+def pack_uint_stream(vals: np.ndarray, bit_width: int) -> bytes:
+    """Pack non-negative ints into a dense bit_width-bits-each stream."""
+    vals = np.asarray(vals, np.uint64)
+    if bit_width == 0 or vals.size == 0:
+        return b""
+    bits = np.zeros((vals.size, bit_width), np.uint8)
+    for b in range(bit_width):
+        bits[:, b] = (vals >> np.uint64(bit_width - 1 - b)) & np.uint64(1)
+    return np.packbits(bits.reshape(-1)).tobytes()
+
+
+def unpack_uint_stream(buf: bytes, bit_width: int, n: int) -> np.ndarray:
+    if bit_width == 0 or n == 0:
+        return np.zeros(n, np.uint64)
+    bits = np.unpackbits(np.frombuffer(buf, np.uint8))[: n * bit_width]
+    bits = bits.reshape(n, bit_width).astype(np.uint64)
+    out = np.zeros(n, np.uint64)
+    for b in range(bit_width):
+        out |= bits[:, b] << np.uint64(bit_width - 1 - b)
+    return out

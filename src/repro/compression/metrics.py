@@ -1,0 +1,110 @@
+"""Compression metrics from the paper: CR (Eq. 1), δ_CR (Eq. 12), Z (Eq. 13),
+and the shared-bit counts S_M / S_E / S_TOT plotted in Fig. 7."""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+
+import numpy as np
+
+try:
+    import zstandard as _zstd
+except Exception:  # pragma: no cover
+    _zstd = None
+
+from ..core.float_bits import F32, F64, BF16, FloatSpec
+from ..core.pipeline import Encoded
+from .bitplane import _as_words, shared_bits_report, words_to_bitplanes
+from .gd import gd_compress
+from .greedy_gd import greedy_gd_compress
+
+_SPECS = {"f64": F64, "f32": F32, "bf16": BF16}
+
+
+def compressed_size_bytes(x, method: str = "greedy_gd") -> int:
+    """Size of x under a compressor. x: array (floats or uint words)."""
+    words = _as_words(x)
+    raw = words.tobytes()
+    if method == "raw":
+        return len(raw)
+    if method == "zlib":
+        return len(zlib.compress(raw, 6))
+    if method == "zlib_bitplanes":
+        planes = words_to_bitplanes(words)
+        return len(zlib.compress(np.packbits(planes.reshape(-1)).tobytes(), 6))
+    if method == "zstd":
+        if _zstd is None:
+            raise RuntimeError("zstandard unavailable")
+        return len(_zstd.ZstdCompressor(level=10).compress(raw))
+    if method == "gd":
+        return -(-gd_compress(words).size_bits() // 8)
+    if method == "greedy_gd":
+        return -(-greedy_gd_compress(words).size_bits() // 8)
+    if method.startswith("xor_"):  # Gorilla-style pre-pass (beyond-paper)
+        from .xor_delta import xor_delta
+
+        return compressed_size_bytes(xor_delta(words), method[4:])
+    raise ValueError(f"unknown compressor {method!r}")
+
+
+def size_fn_for(method: str, width: int = 64):
+    """Scorer for pipeline.encode's auto-selection matching a compressor."""
+    dt = {64: np.uint64, 32: np.uint32, 16: np.uint16}[width]
+
+    def fn(raw: bytes) -> int:
+        return compressed_size_bytes(np.frombuffer(raw, dt), method)
+
+    return fn
+
+
+def compression_ratio(x, metadata_bytes: int = 0, method: str = "greedy_gd") -> float:
+    """Eq.(1): (compressed size + metadata) / uncompressed size."""
+    raw = _as_words(x).nbytes
+    return (compressed_size_bytes(x, method) + metadata_bytes) / raw
+
+
+def delta_cr(cr_prep: float, cr_noprep: float) -> float:
+    """Eq.(12): negative values mean preprocessing improved compression."""
+    return (cr_prep - cr_noprep) / cr_noprep
+
+
+@dataclasses.dataclass
+class CompressionReport:
+    compressor: str
+    method: str                # transform chosen by the pipeline
+    params: dict
+    cr_noprep: float
+    cr_prep: float
+    delta_cr: float            # Eq.(12)
+    z_ratio: float             # Eq.(13) metadata / compressed size
+    shared_before: dict        # S_M/S_E/S_TOT (Fig. 7)
+    shared_after: dict
+
+    def row(self) -> str:
+        return (
+            f"{self.compressor:>12} {self.method:>16} {self.cr_noprep:7.4f} "
+            f"{self.cr_prep:7.4f} {self.delta_cr:+8.2%} {self.z_ratio:7.4f} "
+            f"S_TOT {self.shared_before['S_TOT']:2d}->{self.shared_after['S_TOT']:2d}"
+        )
+
+
+def evaluate(x, enc: Encoded, compressor: str = "greedy_gd") -> CompressionReport:
+    """Compare CR with and without the paper's preprocessing (Fig. 6/7)."""
+    spec = _SPECS[enc.spec_name]
+    meta = enc.metadata_bytes()
+    c_no = compressed_size_bytes(x, compressor)
+    c_pre = compressed_size_bytes(enc.data, compressor)
+    raw = _as_words(x).nbytes
+    cr_no = c_no / raw
+    cr_pre = (c_pre + meta) / raw
+    return CompressionReport(
+        compressor=compressor,
+        method=enc.method,
+        params=enc.params,
+        cr_noprep=cr_no,
+        cr_prep=cr_pre,
+        delta_cr=delta_cr(cr_pre, cr_no),
+        z_ratio=meta / max(c_pre, 1),
+        shared_before=shared_bits_report(x, spec),
+        shared_after=shared_bits_report(enc.data, spec),
+    )

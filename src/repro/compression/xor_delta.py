@@ -1,0 +1,43 @@
+"""XOR-delta (Gorilla-style) word preprocessing — beyond-paper extension.
+
+Time-series float compressors (Gorilla, Chimp, FPZIP-family) XOR each word
+with its predecessor: slowly-varying streams leave only a few active bits.
+This is (a) an additional *baseline* the paper did not compare against, and
+(b) a COMPOSABLE lossless stage: the paper's transforms maximize *globally*
+shared bits, XOR-delta removes *temporally local* redundancy — applying
+XOR-delta after a transform attacks both (the paper's "investigate their
+combination" future work).  Trivially invertible by prefix-XOR.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .bitplane import _as_words
+
+
+def xor_delta(x) -> np.ndarray:
+    """words[i] ^= words[i-1] (words[0] kept).  Lossless, O(n)."""
+    w = _as_words(x).copy()
+    w[1:] ^= w[:-1]
+    return w
+
+
+def xor_undelta(w: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`xor_delta` (prefix XOR scan)."""
+    out = np.asarray(w).copy()
+    acc = out[0].copy() if out.size else None
+    for i in range(1, out.size):
+        acc ^= out[i]
+        out[i] = acc
+    return out
+
+
+def xor_undelta_fast(w: np.ndarray) -> np.ndarray:
+    """Vectorized prefix-XOR via log-steps (O(n log n) work, numpy-speed)."""
+    out = np.asarray(w).copy()
+    n = out.size
+    shift = 1
+    while shift < n:
+        out[shift:] ^= out[:-shift].copy()
+        shift <<= 1
+    return out

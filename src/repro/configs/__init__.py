@@ -1,0 +1,34 @@
+"""Assigned architecture configs (one module per arch) + registry.
+
+Each module exports `config()` (the exact published configuration) and
+`reduced()` (a small same-family config for CPU smoke tests).
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "rwkv6_3b",
+    "granite_moe_1b_a400m",
+    "kimi_k2_1t_a32b",
+    "starcoder2_15b",
+    "nemotron_4_340b",
+    "nemotron_4_15b",
+    "minicpm_2b",
+    "pixtral_12b",
+    "zamba2_7b",
+    "whisper_base",
+]
+
+# CLI ids (--arch <id>) use dashes, matching the assignment table
+CLI_IDS = {a.replace("_", "-"): a for a in ARCH_IDS}
+
+
+def get_config(arch: str, reduced: bool = False):
+    mod_name = CLI_IDS.get(arch, arch).replace("-", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.reduced() if reduced else mod.config()
+
+
+def all_configs(reduced: bool = False):
+    return {a: get_config(a, reduced) for a in ARCH_IDS}

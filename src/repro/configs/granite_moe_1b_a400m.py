@@ -1,0 +1,23 @@
+"""granite-moe-1b-a400m — 24L d_model=1024 16H (GQA kv=8) MoE 32e top-8,
+expert d_ff=512, vocab=49155 [hf:ibm-granite/granite-3.0-1b-a400m-base]."""
+from repro.models.common import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-moe-1b-a400m", family="moe",
+        n_layers=24, d_model=1024, n_heads=16, n_kv=8, head_dim=64,
+        d_ff=512, vocab=49155, act="swiglu",
+        n_experts=32, top_k=8, expert_ff=512,
+        compute_dtype="bfloat16",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="granite-moe-smoke", family="moe",
+        n_layers=2, d_model=64, n_heads=4, n_kv=2, head_dim=16,
+        d_ff=64, vocab=256, act="swiglu",
+        n_experts=8, top_k=2, expert_ff=64,
+        compute_dtype="float32",
+    )

@@ -1,0 +1,24 @@
+"""kimi-k2-1t-a32b — trillion-param MoE (paper-table) [arXiv:2501.kimi2].
+61L d_model=7168 64H (GQA kv=8, head 112) MoE 384e top-8 expert_ff=2048
+(+1 shared expert) vocab=163840."""
+from repro.models.common import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="kimi-k2-1t-a32b", family="moe",
+        n_layers=61, d_model=7168, n_heads=64, n_kv=8, head_dim=112,
+        d_ff=2048, vocab=163840, act="swiglu",
+        n_experts=384, top_k=8, expert_ff=2048, shared_expert_ff=2048,
+        compute_dtype="bfloat16",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="kimi-k2-smoke", family="moe",
+        n_layers=2, d_model=64, n_heads=4, n_kv=2, head_dim=16,
+        d_ff=64, vocab=256, act="swiglu",
+        n_experts=16, top_k=4, expert_ff=64, shared_expert_ff=64,
+        compute_dtype="float32",
+    )

@@ -1,0 +1,22 @@
+"""minicpm-2b — llama-like arch trained with the WSD schedule
+[arXiv:2404.06395; hf].  40L d_model=2304 36H (MHA kv=36, head 64)
+d_ff=5760 vocab=122753, tied embeddings."""
+from repro.models.common import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="minicpm-2b", family="dense",
+        n_layers=40, d_model=2304, n_heads=36, n_kv=36, head_dim=64,
+        d_ff=5760, vocab=122753, act="swiglu", tie_embeddings=True,
+        compute_dtype="bfloat16",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="minicpm-smoke", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv=4, head_dim=16,
+        d_ff=128, vocab=256, act="swiglu", tie_embeddings=True,
+        compute_dtype="float32",
+    )

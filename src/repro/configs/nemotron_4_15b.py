@@ -1,0 +1,21 @@
+"""nemotron-4-15b — GQA + squared-ReLU [arXiv:2402.16819].
+32L d_model=6144 48H (GQA kv=8) d_ff=24576 vocab=256000."""
+from repro.models.common import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="nemotron-4-15b", family="dense",
+        n_layers=32, d_model=6144, n_heads=48, n_kv=8, head_dim=128,
+        d_ff=24576, vocab=256000, act="sq_relu",
+        compute_dtype="bfloat16",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="nemotron-15b-smoke", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv=2, head_dim=16,
+        d_ff=128, vocab=256, act="sq_relu",
+        compute_dtype="float32",
+    )

@@ -1,0 +1,21 @@
+"""nemotron-4-340b — GQA + squared-ReLU [arXiv:2402.16819].
+96L d_model=18432 96H (GQA kv=8, head 192) d_ff=73728 vocab=256000."""
+from repro.models.common import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="nemotron-4-340b", family="dense",
+        n_layers=96, d_model=18432, n_heads=96, n_kv=8, head_dim=192,
+        d_ff=73728, vocab=256000, act="sq_relu",
+        compute_dtype="bfloat16",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="nemotron-340b-smoke", family="dense",
+        n_layers=2, d_model=96, n_heads=6, n_kv=2, head_dim=16,
+        d_ff=384, vocab=256, act="sq_relu",
+        compute_dtype="float32",
+    )

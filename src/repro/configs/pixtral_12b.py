@@ -1,0 +1,24 @@
+"""pixtral-12b — pixtral-ViT frontend (STUB: precomputed patch embeddings)
++ mistral-nemo-like decoder [hf:mistralai/Pixtral-12B-2409].
+40L d_model=5120 32H (GQA kv=8, head 160) d_ff=14336 vocab=131072."""
+from repro.models.common import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="pixtral-12b", family="vlm",
+        n_layers=40, d_model=5120, n_heads=32, n_kv=8, head_dim=160,
+        d_ff=14336, vocab=131072, act="swiglu",
+        frontend="patches", frontend_len=1024,
+        compute_dtype="bfloat16",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="pixtral-smoke", family="vlm",
+        n_layers=2, d_model=64, n_heads=4, n_kv=2, head_dim=16,
+        d_ff=128, vocab=256, act="swiglu",
+        frontend="patches", frontend_len=8,
+        compute_dtype="float32",
+    )

@@ -1,0 +1,22 @@
+"""rwkv6-3b — RWKV-6 "Finch": attention-free, data-dependent decay
+[arXiv:2404.05892; hf].  32L d_model=2560 (head dim 64 -> 40 heads)
+d_ff=8960 vocab=65536."""
+from repro.models.common import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-3b", family="rwkv",
+        n_layers=32, d_model=2560, n_heads=40, n_kv=40, head_dim=64,
+        d_ff=8960, vocab=65536, act="sq_relu",
+        compute_dtype="bfloat16",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-smoke", family="rwkv",
+        n_layers=2, d_model=64, n_heads=4, n_kv=4, head_dim=16,
+        d_ff=128, vocab=256, act="sq_relu",
+        compute_dtype="float32",
+    )

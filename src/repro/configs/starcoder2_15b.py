@@ -1,0 +1,21 @@
+"""starcoder2-15b — GQA + RoPE code LM [arXiv:2402.19173; hf].
+40L d_model=6144 48H (GQA kv=4) d_ff=24576 vocab=49152."""
+from repro.models.common import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="starcoder2-15b", family="dense",
+        n_layers=40, d_model=6144, n_heads=48, n_kv=4, head_dim=128,
+        d_ff=24576, vocab=49152, act="gelu", rope_theta=1e5,
+        compute_dtype="bfloat16",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="starcoder2-smoke", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv=2, head_dim=16,
+        d_ff=128, vocab=256, act="gelu",
+        compute_dtype="float32",
+    )

@@ -1,0 +1,24 @@
+"""whisper-base — enc-dec audio backbone, conv frontend STUBBED to
+precomputed frame embeddings [arXiv:2212.04356].
+6L enc + 6L dec, d_model=512 8H d_ff=2048 vocab=51865."""
+from repro.models.common import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-base", family="encdec",
+        n_layers=6, enc_layers=6, d_model=512, n_heads=8, n_kv=8, head_dim=64,
+        d_ff=2048, vocab=51865, act="gelu",
+        frontend="frames",
+        compute_dtype="bfloat16",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-smoke", family="encdec",
+        n_layers=2, enc_layers=2, d_model=64, n_heads=4, n_kv=4, head_dim=16,
+        d_ff=128, vocab=256, act="gelu",
+        frontend="frames",
+        compute_dtype="float32",
+    )

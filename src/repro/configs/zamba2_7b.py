@@ -1,0 +1,24 @@
+"""zamba2-7b — Mamba2 backbone + shared attention blocks [arXiv:2411.15242].
+81L d_model=3584 (75 mamba + 6 shared-attn applications), 32H attn
+(kv=32, head 112), d_ff=14336, ssm_state=64, vocab=32000."""
+from repro.models.common import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-7b", family="zamba",
+        n_layers=81, d_model=3584, n_heads=32, n_kv=32, head_dim=112,
+        d_ff=14336, vocab=32000, act="swiglu",
+        ssm_state=64, ssm_headdim=64, attn_every=12,
+        compute_dtype="bfloat16",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-smoke", family="zamba",
+        n_layers=5, d_model=64, n_heads=4, n_kv=4, head_dim=16,
+        d_ff=128, vocab=256, act="swiglu",
+        ssm_state=16, ssm_headdim=16, attn_every=2,
+        compute_dtype="float32",
+    )

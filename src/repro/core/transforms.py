@@ -1,0 +1,488 @@
+"""The paper's four lossless preprocessing transforms (§3).
+
+All four move a same-binade dataset into regions of the real line where the
+top ``D`` mantissa bits are shared (Eq. 7 / Fig. 2-5), so that a downstream
+compressor (GD / GreedyGD / zlib) sees more shared bits.
+
+Implementation note (TPU-native adaptation, see DESIGN.md §4/§7):
+the paper phrases each transform as IEEE-754 ⊕/⊗ with addends chosen so the
+ops are exact (Table 1, Eq. 4, Eq. 6).  We implement the arithmetic on the
+*integer significand* ``X = x / ULP(x)`` (int64 here; int32 lanes in the
+Pallas kernels) — on that domain every step is exact **by construction**, and
+equals what the exact fp op would produce whenever the paper's conditions
+hold (validated in tests/test_lossless.py against real fp ⊕/⊖ via 2Sum).
+This is both how a production codec would run on TPU VPU lanes and immune to
+the representability corner cases of the single-fp-add formulation.
+
+Input convention for the cores: ``X`` int64 in ``[2^l, 2^{l+1})`` — the
+significand of a positive normal float in one binade (the paper's
+"all numbers have the same exponent" setup; repro.core.pipeline handles
+arbitrary sign/exponent via exact normalization metadata).
+
+Window convention: *multiply & shift* and *shift & separate* target the TOP
+of each binade (shared top-D mantissa bits all 1, as in Fig. 2/3);
+*shift & save evenness* targets the BOTTOM window (shared bits all 0, Eq. 7).
+*compact bins* packs toward the top of the source binade.  The compressor is
+agnostic to the shared bit VALUE; only the count matters.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .float_bits import F64, FloatSpec
+
+__all__ = [
+    "TransformError",
+    "CompactBinsMeta",
+    "MultiplyShiftMeta",
+    "ShiftSeparateMeta",
+    "ShiftSaveEvenMeta",
+    "compact_bins_forward",
+    "compact_bins_inverse",
+    "multiply_shift_forward",
+    "multiply_shift_inverse",
+    "shift_separate_forward",
+    "shift_separate_inverse",
+    "shift_save_even_forward",
+    "shift_save_even_inverse",
+    "TRANSFORMS",
+]
+
+_HEADER_BITS = 128  # transform id, e*, D/k, n — uniform small header accounting
+
+
+class TransformError(ValueError):
+    """Raised when a transform's domain conditions are not met.
+
+    (e.g. multiply&shift / shift&separate not converging within max_iter —
+    the paper's Fig. 7 plateaus; the pipeline treats this as "candidate
+    rejected" and falls back to another technique.)
+    """
+
+
+def _as_i64(x):
+    return jnp.asarray(x, jnp.int64)
+
+
+def _check_domain(X, spec: FloatSpec):
+    lo = 1 << spec.man_bits
+    hi = lo << 1
+    Xn = np.asarray(X)
+    if Xn.size == 0:
+        raise TransformError("empty dataset")
+    if Xn.min() < lo or Xn.max() >= hi:
+        raise TransformError("significands must lie in [2^l, 2^{l+1})")
+
+
+# ===========================================================================
+# §3.1 compact bins
+# ===========================================================================
+
+@dataclasses.dataclass
+class CompactBinsMeta:
+    e_star: int
+    shifts: np.ndarray       # int64[k]  A_i (significand scale)
+    thresholds: np.ndarray   # int64[k-1] transformed-space bin lower bounds
+
+    def nbits(self) -> int:
+        # k shift values + (k-1) thresholds (paper §3.1), entropy-packed
+        from ..compression.bitplane import compress_int_stream
+
+        return _HEADER_BITS + 8 * (
+            len(compress_int_stream(self.shifts))
+            + len(compress_int_stream(self.thresholds))
+        )
+
+
+def compact_bins_forward(X, n_bins: int, spec: FloatSpec = F64):
+    """Cluster into ``n_bins`` by largest gaps; pack bins toward binade top.
+
+    In-binade shifts at the shared quantum are exact unconditionally
+    (sums of multiples of ULP staying under 2^{E+1} are representable).
+    """
+    X = _as_i64(X)
+    _check_domain(X, spec)
+    k = int(n_bins)
+    if k < 1:
+        raise TransformError("n_bins must be >= 1")
+    if k > int(X.shape[0]):
+        raise TransformError("n_bins exceeds dataset size")
+    top = (jnp.int64(1) << (spec.man_bits + 1)) - 2
+
+    Xs = jnp.sort(X)
+    if k > 1:
+        gaps = Xs[1:] - Xs[:-1]
+        # k-1 largest gaps define bin boundaries (value starting a new bin)
+        gi = jnp.argsort(gaps)[-(k - 1):]
+        bounds = jnp.sort(Xs[gi + 1])                       # int64[k-1]
+    else:
+        bounds = jnp.zeros((0,), jnp.int64)
+
+    # per-bin extrema
+    lo_all = jnp.concatenate([Xs[:1], bounds])              # [k] bin min
+    # bin max: predecessor of next boundary (or global max)
+    idx = jnp.searchsorted(Xs, bounds, side="left")         # first elem of bin j+1
+    hi_all = jnp.concatenate([Xs[idx - 1] if k > 1 else Xs[:0], Xs[-1:]])  # [k]
+    # duplicate boundaries (fewer distinct gaps than k-1) give empty bins with
+    # negative nominal width; clamp so packing stays ordered
+    widths = jnp.maximum(hi_all - lo_all, 0)
+
+    # pack from the top down with margin 2
+    # new_hi[k-1] = top; new_lo[j] = new_hi[j] - width[j]; new_hi[j-1] = new_lo[j]-2
+    rev_w = widths[::-1]
+    occupied = jnp.cumsum(rev_w + 2)[::-1]                  # width+margin above lo_j
+    new_lo = top + 2 - occupied
+    shifts = new_lo - lo_all                                # int64[k], >= 0 iff fits
+
+    if bool(jnp.any(new_lo < (jnp.int64(1) << spec.man_bits))):
+        raise TransformError("bins do not fit in one binade after packing")
+
+    bin_id = jnp.searchsorted(bounds, X, side="right") if k > 1 else jnp.zeros(
+        X.shape, jnp.int64
+    )
+    Xt = X + shifts[bin_id]
+    thresholds = new_lo[1:]                                 # transformed-space
+    meta = CompactBinsMeta(
+        e_star=0,
+        shifts=np.asarray(shifts, np.int64),
+        thresholds=np.asarray(thresholds, np.int64),
+    )
+    return Xt, meta
+
+
+def compact_bins_inverse(Xt, meta: CompactBinsMeta):
+    Xt = _as_i64(Xt)
+    thr = jnp.asarray(meta.thresholds, jnp.int64)
+    shifts = jnp.asarray(meta.shifts, jnp.int64)
+    bin_id = jnp.searchsorted(thr, Xt, side="right") if len(meta.thresholds) else (
+        jnp.zeros(Xt.shape, jnp.int64)
+    )
+    return Xt - shifts[bin_id]
+
+
+# ===========================================================================
+# §3.2 multiply and shift
+# ===========================================================================
+
+@dataclasses.dataclass
+class MultiplyShiftMeta:
+    e_star: int
+    D: int
+    x_max: int        # defines A_1 (paper stores A_1; a_1 = 2^{l+1}-2-x_max)
+    n_iter: int
+
+    def nbits(self) -> int:
+        return _HEADER_BITS + 64  # x_max
+
+
+def _ms_schedule(D: int, x_max: int, spec: FloatSpec):
+    l = spec.man_bits
+    a1 = max((1 << (l + 1)) - 2 - x_max, 0)
+    a_const = (1 << (l - D)) - 2
+    thresh = (1 << (l + 1)) - (1 << (l - D))
+    return a1, a_const, thresh
+
+
+@functools.partial(jax.jit, static_argnames=("max_iter",))
+def _ms_loop(X, a1, a_const, thresh, max_iter: int):
+    """jit'd §3.2 iteration (§Perf C: the eager while_loop ran at 5 MB/s;
+    jitted it runs two orders of magnitude faster on the same schedule)."""
+
+    def cond(state):
+        _, _, active, i = state
+        return jnp.any(active) & (i <= max_iter)
+
+    def body(state):
+        Xc, off, active, i = state
+        a = jnp.where(i == 1, a1, a_const).astype(jnp.int64)
+        Xn = jnp.where(active, Xc + a, Xc)
+        offn = off + active.astype(jnp.int32)
+        cap = active & (Xn >= thresh)
+        return Xn, offn, active & ~cap, i + 1
+
+    off0 = jnp.zeros(X.shape, jnp.int32)
+    act0 = jnp.ones(X.shape, bool)
+    Xf, off, active, _ = lax.while_loop(cond, body, (X, off0, act0, jnp.int32(1)))
+    return Xf, off, active
+
+
+def multiply_shift_forward(X, D: int, max_iter: int = 4096, spec: FloatSpec = F64):
+    """Eq.(8): f(x) = (2 ⊗ x) ⊕ A_i, iterated; capture at top-of-binade window.
+
+    Integer domain: scale doubles each iteration (the ⊗2, exact — exponent
+    increment), so the shift is the CONSTANT a = 2^(l-D)-2 after the first
+    aligning iteration (paper: "store D and A_1; all A_i with i≠1 can be
+    computed").  Returns (X', binade_offset, meta).
+    """
+    X = _as_i64(X)
+    _check_domain(X, spec)
+    l = spec.man_bits
+    if not (1 <= D <= l - 2):
+        raise TransformError(f"multiply&shift needs 1 <= D <= {l-2}")
+    x_max = int(X.max())
+    x_min = int(X.min())
+    a1, a_const, thresh = _ms_schedule(D, x_max, spec)
+    # feasibility precheck (§Perf C): iterations ~ span / a_const
+    if (x_max - x_min) // max(a_const, 1) > max_iter + 1:
+        raise TransformError(
+            f"multiply&shift would need > {max_iter} iterations (D={D})"
+        )
+    Xf, off, active = _ms_loop(
+        X, jnp.int64(a1), jnp.int64(a_const), jnp.int64(thresh), max_iter
+    )
+    if bool(jnp.any(active)):
+        raise TransformError(
+            f"multiply&shift did not converge in {max_iter} iterations (D={D})"
+        )
+    n_iter = int(off.max())
+    meta = MultiplyShiftMeta(e_star=0, D=D, x_max=x_max, n_iter=n_iter)
+    return Xf, off, meta
+
+
+@jax.jit
+def _ms_inv_loop(Xt, off, a1, a_const, n_iter):
+    def body(k, state):
+        Xc, offc = state
+        it = n_iter - k                           # n_iter .. 1
+        a = jnp.where(it == 1, a1, a_const).astype(jnp.int64)
+        sel = offc == it
+        return jnp.where(sel, Xc - a, Xc), jnp.where(sel, offc - 1, offc)
+
+    Xr, _ = lax.fori_loop(0, n_iter, body, (Xt, off))
+    return Xr
+
+
+def multiply_shift_inverse(Xt, offsets, meta: MultiplyShiftMeta, spec: FloatSpec = F64):
+    Xt = _as_i64(Xt)
+    off = jnp.asarray(offsets, jnp.int32)
+    a1, a_const, _ = _ms_schedule(meta.D, meta.x_max, spec)
+    return _ms_inv_loop(
+        Xt, off, jnp.int64(a1), jnp.int64(a_const), jnp.int32(meta.n_iter)
+    )
+
+
+# ===========================================================================
+# §3.3 shift and separate even from odd
+# ===========================================================================
+
+@dataclasses.dataclass
+class ShiftSeparateMeta:
+    e_star: int
+    D: int
+    x_min: int        # A_align anchor (paper stores A_align, D, W_0)
+    x_max: int
+    n_iter: int
+
+    def nbits(self) -> int:
+        return _HEADER_BITS + 2 * 64  # x_min, x_max
+
+
+def _ss_schedule(D: int, x_min: int, x_max: int, n_iter: int, spec: FloatSpec):
+    """Deterministic per-iteration (Ae, Ao, T, parity-threshold) schedule.
+
+    Replayed identically by forward and inverse from the metadata.
+    """
+    l = spec.man_bits
+    top2 = (1 << (l + 2)) - 2          # top of the next binade (y2 scale)
+    thresh_cap = (1 << (l + 1)) - (1 << (l - D))
+    a_align = (1 << (l + 1)) - 2 - x_max
+    lo = x_min + a_align
+    hi = (1 << (l + 1)) - 2
+    sched = []
+    for _ in range(n_iter):
+        W = hi - lo
+        Ae = (top2 - hi) & ~1
+        Wsep = (W + 2) | 1
+        Ao = Ae - Wsep
+        T = (Ae + lo) >> 1             # y < T  <=>  source was odd
+        if (Ao + lo) < (1 << (l + 1)):
+            # odd image would fall below the next binade -> domain violation
+            sched.append((Ae, Ao, T, False))
+            break
+        sched.append((Ae, Ao, T, True))
+        lo = (Ao + lo) >> 1
+        hi = thresh_cap - 1
+        if hi - lo >= W:               # no progress: diverging
+            break
+    return a_align, thresh_cap, sched
+
+
+def shift_separate_forward(X, D: int, max_iter: int = 64, spec: FloatSpec = F64):
+    """Eq.(9)/(10): parity-matched addends; even/odd images kept disjoint so
+    the inverse recovers evenness from position (Eq. 11). Returns
+    (X', binade_offset, meta)."""
+    X = _as_i64(X)
+    _check_domain(X, spec)
+    l = spec.man_bits
+    if not (1 <= D <= l - 2):
+        raise TransformError(f"shift&separate needs 1 <= D <= {l-2}")
+    x_min, x_max = int(X.min()), int(X.max())
+    a_align, thresh_cap, sched = _ss_schedule(D, x_min, x_max, max_iter, spec)
+    if not sched or not sched[-1][3]:
+        raise TransformError("shift&separate: domain violation (W too large)")
+
+    Xc = X + jnp.int64(a_align)
+    off = jnp.zeros(X.shape, jnp.int32)
+    active = jnp.ones(X.shape, bool)
+    for (Ae, Ao, T, ok) in sched:
+        if not ok:
+            break
+        A = jnp.where(Xc & 1, jnp.int64(Ao), jnp.int64(Ae))
+        Y = (Xc + A) >> 1
+        Xc = jnp.where(active, Y, Xc)
+        off = off + active.astype(jnp.int32)
+        active = active & (Xc < thresh_cap)
+        if not bool(jnp.any(active)):
+            break
+    if bool(jnp.any(active)):
+        raise TransformError(
+            f"shift&separate did not converge (D={D}); paper plateau regime"
+        )
+    n_iter = int(off.max())
+    meta = ShiftSeparateMeta(e_star=0, D=D, x_min=x_min, x_max=x_max, n_iter=n_iter)
+    return Xc, off, meta
+
+
+def shift_separate_inverse(Xt, offsets, meta: ShiftSeparateMeta, spec: FloatSpec = F64):
+    Xt = _as_i64(Xt)
+    off = jnp.asarray(offsets, jnp.int32)
+    a_align, _, sched = _ss_schedule(meta.D, meta.x_min, meta.x_max, meta.n_iter, spec)
+    for k in range(meta.n_iter, 0, -1):
+        Ae, Ao, T, _ = sched[k - 1]
+        sel = off == k
+        odd = Xt < T
+        Y2 = Xt << 1
+        Xprev = Y2 - jnp.where(odd, jnp.int64(Ao), jnp.int64(Ae))
+        Xt = jnp.where(sel, Xprev, Xt)
+        off = jnp.where(sel, off - 1, off)
+    return Xt - jnp.int64(a_align)
+
+
+# ===========================================================================
+# §3.4 shift and save evenness
+# ===========================================================================
+
+@dataclasses.dataclass
+class ShiftSaveEvenMeta:
+    e_star: int
+    D: int
+    x_min: int
+    n_chunks: int
+    chunk_ids: np.ndarray   # int64[n] — entropy-packed on disk
+    evenness: np.ndarray    # uint8[n] (1 bit each, zlib'd on disk)
+
+    def _packed(self):
+        import zlib
+
+        from ..compression.bitplane import compress_int_stream
+
+        ids_z = compress_int_stream(self.chunk_ids)
+        even_z = zlib.compress(np.packbits(self.evenness).tobytes(), 6)
+        return ids_z, even_z
+
+    def nbits(self) -> int:
+        ids_z, even_z = self._packed()
+        return _HEADER_BITS + 64 + 8 * (len(ids_z) + len(even_z))
+
+
+def shift_save_even_forward(X, D: int, spec: FloatSpec = F64):
+    """§3.4: single-pass chunk overlay with per-sample evenness metadata.
+
+    Equivalent one-pass form of the paper's iteration (each iteration of the
+    paper's formulation captures one more chunk into the window; the chunk
+    index is exactly "the iteration at which a sample was captured", so we
+    store ceil(log2 k) bits/sample instead of 1 bit × n_iter — never larger).
+    All samples land in the bottom window of binade e*+1 (top-D mantissa
+    bits = 0, Eq. 7). Returns (X', meta); binade offset is 1 for all samples.
+    """
+    X = _as_i64(X)
+    _check_domain(X, spec)
+    l = spec.man_bits
+    if not (1 <= D <= l - 1):
+        raise TransformError(f"shift&save-evenness needs 1 <= D <= {l-1}")
+    w_win = jnp.int64(1) << (l + 1 - D)
+    w_eff = w_win - 2
+    if int(w_eff) < 1:
+        raise TransformError("window too small")
+    x_min = int(X.min())
+    j = (X - x_min) // w_eff
+    a_base = (jnp.int64(1) << (l + 1)) - x_min - j * w_eff
+    a_even = a_base + (a_base & 1)            # round UP to even
+    parity = (X & 1).astype(jnp.int64)
+    A = a_even + parity                       # parity(A) == parity(X) => exact
+    Y2 = X + A                                # even, in [2^{l+1}, 2^{l+1}+w_eff+2)
+    Y = Y2 >> 1                               # significand at binade e*+1
+    meta = ShiftSaveEvenMeta(
+        e_star=0,
+        D=D,
+        x_min=x_min,
+        n_chunks=int(j.max()) + 1,
+        chunk_ids=np.asarray(j, np.int64),
+        evenness=np.asarray(parity, np.uint8),
+    )
+    return Y, meta
+
+
+def shift_save_even_inverse(Yt, meta: ShiftSaveEvenMeta, spec: FloatSpec = F64):
+    l = spec.man_bits
+    Y2 = _as_i64(Yt) << 1
+    j = jnp.asarray(meta.chunk_ids, jnp.int64)
+    w_eff = (jnp.int64(1) << (l + 1 - meta.D)) - 2
+    a_base = (jnp.int64(1) << (l + 1)) - meta.x_min - j * w_eff
+    a_even = a_base + (a_base & 1)
+    A = a_even + jnp.asarray(meta.evenness, jnp.int64)
+    return Y2 - A
+
+
+# ===========================================================================
+# registry (unified (forward, inverse) returning (X', offsets, meta))
+# ===========================================================================
+
+def _cb_fwd(X, *, n_bins=8, spec=F64, **_):
+    Xt, meta = compact_bins_forward(X, n_bins, spec)
+    return Xt, jnp.zeros(Xt.shape, jnp.int32), meta
+
+
+def _cb_inv(Xt, offsets, meta, spec=F64):
+    return compact_bins_inverse(Xt, meta)
+
+
+def _ms_fwd(X, *, D=8, max_iter=4096, spec=F64, **_):
+    return multiply_shift_forward(X, D, max_iter, spec)
+
+
+def _ss_fwd(X, *, D=4, max_iter=64, spec=F64, **_):
+    return shift_separate_forward(X, D, max_iter, spec)
+
+
+def _se_fwd(X, *, D=12, spec=F64, **_):
+    Y, meta = shift_save_even_forward(X, D, spec)
+    return Y, jnp.ones(Y.shape, jnp.int32), meta
+
+
+def _se_inv(Yt, offsets, meta, spec=F64):
+    return shift_save_even_inverse(Yt, meta, spec)
+
+
+def _id_fwd(X, *, spec=F64, **_):
+    return _as_i64(X), jnp.zeros(jnp.shape(X), jnp.int32), None
+
+
+def _id_inv(Xt, offsets, meta, spec=F64):
+    return _as_i64(Xt)
+
+
+TRANSFORMS = {
+    "identity": (_id_fwd, _id_inv),
+    "compact_bins": (_cb_fwd, _cb_inv),
+    "multiply_shift": (_ms_fwd, lambda Xt, off, m, spec=F64: multiply_shift_inverse(Xt, off, m, spec)),
+    "shift_separate": (_ss_fwd, lambda Xt, off, m, spec=F64: shift_separate_inverse(Xt, off, m, spec)),
+    "shift_save_even": (_se_fwd, _se_inv),
+}

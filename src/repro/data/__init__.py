@@ -1,0 +1,1 @@
+from .synthetic import chicago_taxi_fares, gas_turbine_emissions, DATASETS  # noqa: F401

@@ -1,0 +1,1 @@
+from .sharding import batch_specs, cache_specs, param_specs  # noqa: F401

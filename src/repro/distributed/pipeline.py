@@ -1,0 +1,123 @@
+"""Pipeline parallelism over the "pod" mesh axis (GPipe-style).
+
+Rationale (DESIGN.md §6): inter-pod links are the slowest in the system, and
+pipeline parallelism has the lowest cross-link bandwidth demand of all the
+parallelism modes — per microbatch, only the boundary activations
+(B_micro x S x D) cross the pod boundary, vs. full gradient mirrors for
+pod-DP.  The multi-pod dry-run exercises BOTH mappings.
+
+Implementation: `shard_map` over ("pod",); each pod holds L/n_stages layers
+(leading stage axis sharded on "pod"); microbatches stream through with
+`jax.lax.ppermute` boundary handoffs.  The schedule below is the classic
+GPipe loop unrolled over (n_micro + n_stages - 1) ticks; bubbles are
+explicit.  Loss is computed on the last stage and psum'd back.
+
+This module targets the DENSE transformer family (the PP showcase); other
+families use pod-DP in the dry-run.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from ..models import transformer as TF
+from ..models.common import ModelConfig
+from ..models.layers import cross_entropy_from_hidden, rmsnorm
+
+
+def stage_params_spec(pspecs_layers):
+    """Layer-stacked param specs -> add leading "pod" stage sharding."""
+    return jax.tree.map(
+        lambda spec: P(*(("pod",) + tuple(spec))), pspecs_layers,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def pipelined_loss(params, batch, cfg: ModelConfig, mesh, n_micro: int = 4):
+    """GPipe forward loss over the pod axis. params["layers"] leaves are
+    (n_stages, L/n_stages, ...) with the stage axis sharded on "pod".
+
+    Embedding/unembedding run on every pod (replicated weights) but only
+    the first/last stage's contribution is used (masked) — keeps the
+    shard_map body SPMD-uniform.
+    """
+    n_stages = mesh.shape["pod"]
+
+    def body(layers, embed, unembed, ln_f, tokens, labels):
+        stage = jax.lax.axis_index("pod")
+        b, s = tokens.shape
+        mb = b // n_micro
+        x_all = embed.astype(cfg.cdt)[tokens]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (mb, s))
+
+        def run_stage(h):
+            # inside shard_map the sharded stage axis has local size 1
+            stage_layers = jax.tree.map(lambda p: p[0], layers)
+            out, _ = jax.lax.scan(
+                lambda c, lp: (TF._layer_fwd(lp, c, cfg, positions)[0], None),
+                h, stage_layers,
+            )
+            return out
+
+        # GPipe ticks: at tick t, stage s processes microbatch (t - s)
+        n_ticks = n_micro + n_stages - 1
+        loss_sum = jnp.float32(0)
+        count = jnp.int32(0)
+        carry_in = jnp.zeros((mb, s, cfg.d_model), cfg.cdt)
+
+        for t in range(n_ticks):
+            mb_idx = t - stage  # which microbatch this stage works on
+            valid = (mb_idx >= 0) & (mb_idx < n_micro)
+            mb_safe = jnp.clip(mb_idx, 0, n_micro - 1)
+            x_mb = jax.lax.dynamic_slice_in_dim(x_all, mb_safe * mb, mb, axis=0)
+            h_in = jnp.where(stage == 0, x_mb, carry_in)
+            h_out = run_stage(h_in)
+            # last stage computes loss for its microbatch
+            lb = jax.lax.dynamic_slice_in_dim(labels, mb_safe * mb, mb, axis=0)
+            hn = rmsnorm(h_out, ln_f)
+            l = cross_entropy_from_hidden(hn, unembed, lb)
+            is_last = stage == n_stages - 1
+            take = valid & is_last
+            loss_sum = loss_sum + jnp.where(take, l, 0.0)
+            count = count + jnp.where(take, 1, 0)
+            # hand the boundary activation to the next stage
+            carry_in = jax.lax.ppermute(
+                h_out, "pod",
+                [(i, (i + 1) % n_stages) for i in range(n_stages)],
+            )
+
+        total = jax.lax.psum(loss_sum, ("pod", "data"))
+        n = jax.lax.psum(count, ("pod", "data"))
+        return total / jnp.maximum(n, 1)
+
+    in_specs = (
+        jax.tree.map(lambda _: P("pod"), params["layers"]),
+        P(), P(), P(),               # embed, unembed, ln_f replicated
+        P(("data",)), P(("data",)),  # batch over data axis
+    )
+    fn = shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=P(), check_rep=False
+    )
+    unembed = params.get("unembed")
+    if unembed is None:
+        unembed = params["embed"].T
+    return fn(
+        params["layers"], params["embed"], unembed, params["ln_f"],
+        batch["tokens"], batch["labels"],
+    )
+
+
+def reshape_layers_for_stages(params, n_stages: int):
+    """(L, ...) stacked layer params -> (n_stages, L/n_stages, ...)."""
+    def r(p):
+        l = p.shape[0]
+        assert l % n_stages == 0, f"L={l} not divisible by {n_stages} stages"
+        return p.reshape((n_stages, l // n_stages) + p.shape[1:])
+
+    out = dict(params)
+    out["layers"] = jax.tree.map(r, params["layers"])
+    return out

@@ -1,0 +1,190 @@
+"""Sharding rules: param/batch/cache pytrees -> PartitionSpec pytrees.
+
+Strategy (DESIGN.md §6):
+ * TP on "model": attention heads / head_dim, MLP hidden, MoE expert axis
+   (EP), vocab for embed/unembed.
+ * DP on "data" (+ "pod" when multi-pod): batch dims; optional FSDP — the
+   non-TP feature axis of large params additionally sharded on "data"
+   (GSPMD inserts per-layer all-gathers; optimizer state shards likewise).
+ * Every rule is divisibility-checked: an axis that does not divide the
+   mesh axis size falls back to replication rather than failing the
+   compile — this is what lets all 40 (arch x shape) cells share one rule
+   set.
+
+Rules are written against array PATHS (pytree key paths), so they cover
+the scan-stacked (L, ...) layouts uniformly.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..models.common import ModelConfig
+
+
+def _axis_size(mesh, name) -> int:
+    if isinstance(name, tuple):
+        s = 1
+        for n in name:
+            s *= _axis_size(mesh, n)
+        return s
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _check(mesh, shape, spec):
+    """Drop spec entries that don't divide the dim; drop unknown axes."""
+    out = []
+    for dim, name in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if name is None:
+            out.append(None)
+            continue
+        names = name if isinstance(name, tuple) else (name,)
+        names = tuple(n for n in names if n in mesh.axis_names)
+        if not names:
+            out.append(None)
+            continue
+        size = _axis_size(mesh, names)
+        out.append(names if len(names) > 1 else names[0]) if dim % size == 0 else \
+            out.append(None)
+    return P(*out)
+
+
+_COMMON_RULES: list[tuple[str, tuple]] = [
+    # --- embeddings / output ---
+    (r"embed$", ("model", "fsdp")),            # (V, D)
+    (r"unembed$", ("fsdp", "model")),          # (D, V)
+    # --- attention ---
+    (r"attn/(wq|wk|wv)$", ("fsdp", "model")),  # (D, H*dh)
+    (r"attn/wo$", ("model", "fsdp")),          # (H*dh, D)
+    (r"cross/(wq|wk|wv)$", ("fsdp", "model")),
+    (r"cross/wo$", ("model", "fsdp")),
+]
+
+_MOE_RULES = [
+    (r"ffn/router$", (None, None)),
+    (r"ffn/shared/(wi|wg)$", ("fsdp", "model")),
+    (r"ffn/shared/wo$", ("model", "fsdp")),
+    (r"ffn/(wi|wg)$", ("model", "fsdp", None)),   # (E, D, F) EP on experts
+    (r"ffn/wo$", ("model", None, "fsdp")),        # (E, F, D)
+]
+
+_DENSE_FFN_RULES = [
+    (r"ffn/(wi|wg)$", ("fsdp", "model")),      # (D, F)
+    (r"ffn/wo$", ("model", "fsdp")),           # (F, D)
+]
+
+_RWKV_RULES = [
+    (r"(wr|wk|wv|wg)$", ("fsdp", "model")),
+    (r"wo$", ("model", "fsdp")),
+    (r"(w0|wB)$", (None, "model")),
+    (r"wA$", ("fsdp", None)),
+    (r"u$", ("model", None)),                  # (H, N)
+    (r"cm_k$", ("fsdp", "model")),
+    (r"cm_v$", ("model", "fsdp")),
+    (r"cm_r$", ("fsdp", "model")),
+]
+
+_MAMBA_RULES = [
+    (r"in_proj$", ("fsdp", "model")),
+    (r"out_proj$", ("model", "fsdp")),
+    (r"conv_w$", (None, "model")),
+    (r"(A_log|D|dt_bias)$", ("model",)),
+]
+
+
+def _rules_for(cfg: ModelConfig):
+    ffn = _MOE_RULES if cfg.is_moe else _DENSE_FFN_RULES
+    extra = []
+    if cfg.family == "rwkv":
+        extra = _RWKV_RULES
+    elif cfg.family == "zamba":
+        extra = _MAMBA_RULES
+    return _COMMON_RULES + ffn + extra
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_specs(params_shape, cfg: ModelConfig, mesh, fsdp: bool = False):
+    """ShapeDtypeStruct pytree -> PartitionSpec pytree."""
+    fsdp_axis = "data" if fsdp else None
+    rules = _rules_for(cfg)
+
+    def spec_one(path, leaf):
+        ps = _path_str(path)
+        ndim = len(leaf.shape)
+        for pat, rule in rules:
+            if re.search(pat, ps):
+                rule = tuple(fsdp_axis if r == "fsdp" else r for r in rule)
+                # stacked-layer leading axis: pad rule with None in front
+                if ndim == len(rule) + 1:
+                    rule = (None,) + rule
+                elif ndim != len(rule):
+                    rule = (None,) * ndim
+                return _check(mesh, leaf.shape, rule)
+        return P(*([None] * ndim))  # norms, scalars, biases: replicate
+
+    return jax.tree_util.tree_map_with_path(spec_one, params_shape)
+
+
+def batch_specs(batch_shape, mesh):
+    """Batch dims over ("pod","data"); feature dims replicated."""
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+    def spec_one(path, leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        return _check(mesh, leaf.shape, (dp,) + (None,) * (nd - 1))
+
+    return jax.tree_util.tree_map_with_path(spec_one, batch_shape)
+
+
+def cache_specs(cache_shape, cfg: ModelConfig, mesh):
+    """KV caches: batch on ("pod","data"), head_dim (last axis) on "model".
+
+    head_dim is always a multiple of 16 across the assigned archs, while
+    n_kv often is not — sharding the contraction dim is the TP choice that
+    always divides (DESIGN.md §6)."""
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+    def spec_one(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        nd = len(shape)
+        if nd == 0:
+            return P()
+        if re.search(r"(^|/)pos$", ps):
+            return _check(mesh, shape, (dp,))
+        if re.search(r"(^|/)(k|v)$", ps):
+            if nd == 5:   # (L, B, S, Hkv, dh)
+                return _check(mesh, shape, (None, dp, None, None, "model"))
+            if nd == 4:   # (B, S, Hkv, dh)
+                return _check(mesh, shape, (dp, None, None, "model"))
+        if re.search(r"(^|/)S$", ps):
+            # rwkv (L,B,H,N,N) / mamba (L,B,H,N,P): heads on model
+            if nd == 5:
+                return _check(mesh, shape, (None, dp, "model", None, None))
+            if nd == 4:
+                return _check(mesh, shape, (dp, "model", None, None))
+        if re.search(r"(^|/)enc$", ps):
+            return _check(mesh, shape, (dp, None, None))
+        if re.search(r"(^|/)(conv|x_tm|x_cm)$", ps):
+            return _check(mesh, shape, (None, dp) + (None,) * (nd - 3) + ("model",))
+        # fallback: batch-ish first axis
+        return _check(mesh, shape, (dp,) + (None,) * (nd - 1))
+
+    return jax.tree_util.tree_map_with_path(spec_one, cache_shape)

@@ -1,0 +1,128 @@
+"""jit-able train_step / serve_step builders with sharding attached.
+
+`make_train_step`: loss -> grads -> AdamW, with optional microbatch
+gradient accumulation (lax.scan over microbatches — memory/perf knob used
+by the §Perf hillclimbs).
+`make_serve_step`: one decode step against the sharded cache.
+Both return (fn, in_shardings, out_shardings) ready for jax.jit.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models.registry import Model
+from ..optim import adamw_init, adamw_update
+from .sharding import batch_specs, cache_specs, param_specs
+
+
+def opt_specs_like(pspecs):
+    """Optimizer state sharded like params; step replicated."""
+    return {
+        "step": P(),
+        "m": pspecs,
+        "v": pspecs,
+    }
+
+
+def make_train_step(model: Model, mesh, *, lr=3e-4, fsdp=False, n_micro=1):
+    cfg = model.cfg
+
+    def train_step(params, opt_m, opt_v, opt_step, batch):
+        def loss_fn(p, b):
+            return model.loss(p, b)
+
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def micro(b):
+                return jax.tree.map(
+                    lambda x: x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:]),
+                    b,
+                )
+
+            mb = micro(batch)
+
+            def acc_step(carry, b):
+                l, g = jax.value_and_grad(loss_fn)(params, b)
+                return (
+                    carry[0] + l,
+                    jax.tree.map(lambda a, x: a + x.astype(jnp.float32), carry[1], g),
+                ), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss, grads), _ = jax.lax.scan(acc_step, (jnp.float32(0), zero), mb)
+            loss = loss / n_micro
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+
+        from ..optim.adamw import AdamWState
+
+        st = AdamWState(step=opt_step, m=opt_m, v=opt_v)
+        new_params, new_st, metrics = adamw_update(grads, st, params, lr)
+        metrics["loss"] = loss.astype(jnp.float32)
+        return new_params, new_st.m, new_st.v, new_st.step, metrics
+
+    return train_step
+
+
+def shardings_for_train(model: Model, mesh, batch_shape, *, fsdp=False):
+    cfg = model.cfg
+    pshape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    pspecs = param_specs(pshape, cfg, mesh, fsdp=fsdp)
+    bspecs = batch_specs(batch_shape, mesh)
+    ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                                   is_leaf=lambda x: isinstance(x, P))
+    in_sh = (ns(pspecs), ns(pspecs), ns(pspecs), NamedSharding(mesh, P()), ns(bspecs))
+    metrics_sh = {
+        "grad_norm": NamedSharding(mesh, P()),
+        "lr": NamedSharding(mesh, P()),
+        "loss": NamedSharding(mesh, P()),
+    }
+    out_sh = (ns(pspecs), ns(pspecs), ns(pspecs), NamedSharding(mesh, P()), metrics_sh)
+    return pshape, pspecs, in_sh, out_sh
+
+
+def make_serve_step(model: Model, mesh):
+    cfg = model.cfg
+
+    def serve_step(params, token, cache):
+        logits, new_cache = model.decode_step(params, token, cache)
+        # greedy sampling on-device keeps the serving loop device-resident
+        next_tok = jnp.argmax(logits.astype(jnp.float32), axis=-1).astype(jnp.int32)
+        return next_tok, logits, new_cache
+
+    return serve_step
+
+
+def shardings_for_serve(model: Model, mesh, token_shape, cache_shape):
+    cfg = model.cfg
+    pshape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    pspecs = param_specs(pshape, cfg, mesh, fsdp=False)
+    cspecs = cache_specs(cache_shape, cfg, mesh)
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    from .sharding import _check
+
+    tok_spec = _check(mesh, token_shape.shape, (dp,))
+    ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                                   is_leaf=lambda x: isinstance(x, P))
+    in_sh = (ns(pspecs), NamedSharding(mesh, tok_spec), ns(cspecs))
+    out_sh = (
+        NamedSharding(mesh, tok_spec),
+        NamedSharding(mesh, _check(mesh, (token_shape.shape[0], cfg.vocab),
+                                   (dp, "model"))),
+        ns(cspecs),
+    )
+    return pshape, in_sh, out_sh
+
+
+def make_prefill_step(model: Model, mesh):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill_step

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+Three kernels, each a `pl.pallas_call` with explicit BlockSpec tiling, a
+jit'd wrapper (ops.py) and a pure-jnp oracle (ref.py):
+
+* ``bitplane_transpose`` — 32x32 bit-matrix butterfly transpose, the GD
+  bit-plane packing hot loop (HBM-bandwidth bound, pure VPU).
+* ``mshift`` — the iterative multiply&shift transform (§3.2) fused into a
+  single VMEM-resident loop: all iterations without per-iteration HBM
+  round-trips (the TPU-native rethink of the paper's iterate-until-captured
+  loop).
+* ``sharedbits`` — AND/OR reduction producing the shared-bit mask that
+  drives GreedyGD base selection and the transforms' D_M choice.
+
+All kernels run in interpret mode on CPU (validated against ref.py in
+tests/test_kernels.py) and compile for TPU as the target.
+"""
+import jax
+
+INTERPRET_DEFAULT = jax.default_backend() != "tpu"  # CPU container: interpret

@@ -1,0 +1,40 @@
+"""jit'd public wrapper for the bit-plane transpose kernel.
+
+``to_bitplanes(words)``: uint32[n] (n % 32 == 0) -> uint32[32, n//32], where
+row q is bit-plane (31-q) of the stream in the kernel's fixed permutation
+(see ref.py).  ``from_bitplanes`` inverts it exactly (the 32x32 bit
+transpose is self-inverse).  Arbitrary n is handled by zero-padding to the
+kernel's (G_BLK*32)-word granularity.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import G_BLK, bitplane_transpose_blocks
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def transpose_groups(w: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    """uint32[g, 32] -> uint32[g, 32] per-group bit transpose, any g."""
+    g = w.shape[0]
+    gp = -(-g // G_BLK) * G_BLK
+    wp = jnp.zeros((gp, 32), jnp.uint32).at[:g].set(w)
+    return bitplane_transpose_blocks(wp, interpret=interpret)[:g]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def to_bitplanes(words: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    n = words.shape[0]
+    assert n % 32 == 0, "pad the word stream to a multiple of 32"
+    t = transpose_groups(words.reshape(n // 32, 32), interpret=interpret)
+    return t.T  # [32, n//32]: row-major plane streams
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def from_bitplanes(planes: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    t = planes.T  # [g, 32]
+    w = transpose_groups(t, interpret=interpret)
+    return w.reshape(-1)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the 32x32 bit-matrix butterfly transpose.
+
+Contract (Hacker's Delight transpose32 convention, anti-diagonal):
+
+    T[g, q] bit j  ==  W[g, 31-j] bit (31-q)
+
+i.e. output word q packs input-bit-plane (31-q) with group word order
+reversed.  This is a fixed, self-inverse bit permutation (applying the op
+twice is the identity — tested), so downstream consumers (GD base split,
+zlib over planes, shared-bit runs) are unaffected by the axis reversals:
+they only need *some* consistent plane-major layout.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bitplane_transpose_ref(w: jnp.ndarray) -> jnp.ndarray:
+    assert w.shape[-1] == 32 and w.dtype == jnp.uint32
+    out = jnp.zeros_like(w)
+    for q in range(32):
+        acc = jnp.zeros_like(w[..., 0])
+        for j in range(32):
+            bit = (w[..., 31 - j] >> jnp.uint32(31 - q)) & jnp.uint32(1)
+            acc = acc | (bit << jnp.uint32(j))
+        out = out.at[..., q].set(acc)
+    return out

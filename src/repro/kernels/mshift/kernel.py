@@ -1,0 +1,76 @@
+"""Pallas kernel: fused iterative multiply&shift transform (paper §3.2).
+
+The paper's transform applies up to N_iter rounds of ``x <- 2x (+) A_i``;
+a naive implementation round-trips HBM every round.  This kernel keeps the
+tile resident in VMEM and runs ALL rounds in-register (int32 significand
+domain, f32 spec l=23 — TPU VPU has no 64-bit lanes; the f64 codec path
+stays on host, see DESIGN.md §4).
+
+Block: (ROWS, 128) int32 = 64 KiB in-tile + 2 out-tiles; grid over row
+blocks.  The per-element iteration is a `lax.fori_loop` with a static
+trip count (max_iter), masked per element — identical semantics to the
+host transform's while_loop, but throughput-shaped.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+ROWS = 128
+L32 = 23  # f32 mantissa bits
+
+
+def _kernel(a1_ref, x_ref, out_x_ref, out_off_ref, *, d: int, max_iter: int):
+    a_const = jnp.int32((1 << (L32 - d)) - 2)
+    thresh = jnp.int32((1 << (L32 + 1)) - (1 << (L32 - d)))
+    a1 = a1_ref[0, 0]
+    x0 = x_ref[...]
+
+    def body(i, st):
+        x, off, active = st
+        a = jnp.where(i == 0, a1, a_const)
+        xn = jnp.where(active, x + a, x)
+        offn = off + active.astype(jnp.int32)
+        cap = active & (xn >= thresh)
+        return xn, offn, active & ~cap
+
+    x, off, active = lax.fori_loop(
+        0,
+        max_iter,
+        body,
+        (x0, jnp.zeros_like(x0), jnp.ones_like(x0, dtype=jnp.bool_)),
+    )
+    # unconverged elements flagged with offset -1 (host falls back per chunk)
+    out_x_ref[...] = x
+    out_off_ref[...] = jnp.where(active, jnp.int32(-1), off)
+
+
+@functools.partial(jax.jit, static_argnames=("d", "max_iter", "interpret"))
+def mshift_blocks(
+    x: jnp.ndarray, a1: jnp.ndarray, d: int, max_iter: int, interpret: bool = True
+):
+    """x: int32[r, 128] significands (r % ROWS == 0); a1: int32[1,1]."""
+    r = x.shape[0]
+    grid = (r // ROWS,)
+    kernel = functools.partial(_kernel, d=d, max_iter=max_iter)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((ROWS, 128), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((ROWS, 128), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS, 128), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, 128), jnp.int32),
+            jax.ShapeDtypeStruct((r, 128), jnp.int32),
+        ],
+        interpret=interpret,
+    )(a1, x)

@@ -1,0 +1,27 @@
+"""jit'd wrapper: multiply&shift transform over a flat int32 significand
+stream (f32 spec), padding to kernel granularity and computing the
+data-dependent first-iteration alignment a1 = 2^(l+1) - 2 - max(X)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import L32, ROWS, mshift_blocks
+
+
+@functools.partial(jax.jit, static_argnames=("d", "max_iter", "interpret"))
+def mshift(x: jnp.ndarray, d: int, max_iter: int = 64, interpret: bool = True):
+    """x: int32[n] in [2^23, 2^24). Returns (x', offsets) with offsets == -1
+    where the element did not converge within max_iter (caller falls back)."""
+    n = x.shape[0]
+    a1 = jnp.maximum((1 << (L32 + 1)) - 2 - jnp.max(x), 0).astype(jnp.int32)
+    cols = ROWS * 128
+    npad = -(-n // cols) * cols
+    # pad with the max value: converges in one iteration, discarded after
+    xp = jnp.full((npad,), (1 << (L32 + 1)) - 2, jnp.int32).at[:n].set(x)
+    xb, offb = mshift_blocks(
+        xp.reshape(-1, 128), a1.reshape(1, 1), d, max_iter, interpret=interpret
+    )
+    return xb.reshape(-1)[:n], offb.reshape(-1)[:n]

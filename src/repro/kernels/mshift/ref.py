@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused multiply&shift kernel (f32/int32 domain).
+
+Same schedule as repro.core.transforms.multiply_shift_forward with
+spec=F32, but with the kernel's fixed-trip-count masked loop semantics and
+-1 offset flag for unconverged elements.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+L32 = 23
+
+
+def mshift_ref(x: jnp.ndarray, a1: int, d: int, max_iter: int):
+    a_const = (1 << (L32 - d)) - 2
+    thresh = (1 << (L32 + 1)) - (1 << (L32 - d))
+    off = jnp.zeros_like(x)
+    active = jnp.ones(x.shape, bool)
+    for i in range(max_iter):
+        a = a1 if i == 0 else a_const
+        xn = jnp.where(active, x + jnp.int32(a), x)
+        off = off + active.astype(jnp.int32)
+        cap = active & (xn >= thresh)
+        active = active & ~cap
+        x = xn
+    return x, jnp.where(active, jnp.int32(-1), off)

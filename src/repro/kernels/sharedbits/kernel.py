@@ -1,0 +1,54 @@
+"""Pallas kernel: streaming AND/OR reduction for the shared-bit mask.
+
+shared bits = positions where AND-reduce == OR-reduce over the whole
+stream (all samples agree).  This drives GreedyGD's free base seed and the
+transforms' feasible-D computation, and is the only full-stream scan in
+the encoder — worth a fused single-pass kernel (one HBM read total,
+vs. two for separate AND and OR passes).
+
+Grid accumulation pattern: every grid step AND/OR-reduces its (ROWS, 128)
+uint32 tile to two 128-lane rows and folds them into a single (2, 128)
+output block (same block for every step — initialized at step 0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+ROWS = 512
+
+
+def _kernel(x_ref, out_ref):
+    i = pl.program_id(0)
+    x = x_ref[...]
+    blk_and = lax.reduce(x, jnp.uint32(0xFFFFFFFF), lax.bitwise_and, (0,))
+    blk_or = lax.reduce(x, jnp.uint32(0), lax.bitwise_or, (0,))
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[0, :] = blk_and
+        out_ref[1, :] = blk_or
+
+    @pl.when(i > 0)
+    def _acc():
+        out_ref[0, :] = out_ref[0, :] & blk_and
+        out_ref[1, :] = out_ref[1, :] | blk_or
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def andor_blocks(x: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    """x: uint32[r, 128], r % ROWS == 0 -> uint32[2, 128] (AND row, OR row)."""
+    r = x.shape[0]
+    grid = (r // ROWS,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((ROWS, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((2, 128), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((2, 128), jnp.uint32),
+        interpret=interpret,
+    )(x)

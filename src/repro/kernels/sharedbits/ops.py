@@ -1,0 +1,44 @@
+"""jit'd wrappers: shared-bit mask of uint32 / uint64 / float streams."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernel import ROWS, andor_blocks
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def shared_mask_u32(words: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    """uint32[n] -> scalar uint32 shared-bit mask (n >= 1)."""
+    n = words.shape[0]
+    cols = ROWS * 128
+    npad = -(-n // cols) * cols
+    # pad by replicating the first word: neutral for both AND and OR
+    xp = jnp.full((npad,), words[0], jnp.uint32).at[:n].set(words)
+    acc = andor_blocks(xp.reshape(-1, 128), interpret=interpret)
+    a = lax.reduce(acc[0], jnp.uint32(0xFFFFFFFF), lax.bitwise_and, (0,))
+    o = lax.reduce(acc[1], jnp.uint32(0), lax.bitwise_or, (0,))
+    return ~(a ^ o)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def shared_mask_u64(words: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    """uint64[n] -> scalar uint64 mask, via hi/lo u32 lanes (TPU-native)."""
+    lo = words.astype(jnp.uint32)
+    hi = (words >> jnp.uint64(32)).astype(jnp.uint32)
+    mlo = shared_mask_u32(lo, interpret=interpret)
+    mhi = shared_mask_u32(hi, interpret=interpret)
+    return (mhi.astype(jnp.uint64) << jnp.uint64(32)) | mlo.astype(jnp.uint64)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def shared_mask_floats(x: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    b = lax.bitcast_convert_type(
+        x, {4: jnp.uint32, 8: jnp.uint64}[x.dtype.itemsize]
+    )
+    if b.dtype == jnp.uint64:
+        return shared_mask_u64(b.reshape(-1), interpret=interpret)
+    return shared_mask_u32(b.reshape(-1), interpret=interpret)

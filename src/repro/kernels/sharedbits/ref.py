@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the shared-bit AND/OR reduction."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def shared_mask_ref(words: jnp.ndarray) -> jnp.ndarray:
+    """uint32[n] -> scalar uint32 mask of bit positions shared by all."""
+    a = lax.reduce(words, jnp.uint32(0xFFFFFFFF), lax.bitwise_and, (0,))
+    o = lax.reduce(words, jnp.uint32(0), lax.bitwise_or, (0,))
+    return ~(a ^ o)

@@ -1,0 +1,280 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes, print memory/cost analysis, and extract the roofline
+terms (compute / memory / collective) from the compiled artifact.
+
+MUST set XLA_FLAGS before ANY jax import (jax locks the device count at
+first init) — hence the two lines above everything else.
+
+Usage:
+  python -m repro.launch.dryrun --arch starcoder2-15b --shape train_4k
+  python -m repro.launch.dryrun --all --out results/dryrun.json
+  python -m repro.launch.dryrun --arch kimi-k2-1t-a32b --shape train_4k --multipod
+"""
+import argparse
+import json
+import re
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, CLI_IDS, get_config
+from repro.distributed.steps import (
+    make_serve_step,
+    make_train_step,
+    shardings_for_serve,
+    shardings_for_train,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model, input_specs
+from repro.models.registry import SHAPES, cell_is_live
+
+# v5e hardware constants (roofline denominators)
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+HBM_BW = 819e9           # B/s per chip
+LINK_BW = 50e9           # B/s per ICI link
+
+# archs whose params/optimizer need FSDP (optimizer state >> HBM otherwise)
+FSDP_ARCHS = {
+    "kimi_k2_1t_a32b", "starcoder2_15b", "nemotron_4_340b",
+    "nemotron_4_15b", "pixtral_12b", "granite_moe_1b_a400m",
+}
+
+# §Perf memory-term knob: microbatch counts for the biggest train cells
+# (gradient accumulation via lax.scan, see distributed/steps.py).
+# nemotron-340b measured: temp 799 GiB (n_micro=1) -> 99 GiB (n_micro=8).
+MICRO_ARCHS = {"nemotron_4_340b": 8, "kimi_k2_1t_a32b": 4}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(tok: str) -> int:
+    m = _SHAPE_RE.match(tok)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_bytes_from_hlo(hlo: str) -> dict:
+    """Sum operand bytes of every collective op in the (per-device) HLO."""
+    out = {c: 0 for c in _COLLECTIVES}
+    count = {c: 0 for c in _COLLECTIVES}
+    for line in hlo.splitlines():
+        for c in _COLLECTIVES:
+            op = f" {c}("
+            if op in line or f" {c}-start(" in line:
+                # operand list inside the parens
+                try:
+                    args = line.split("(", 1)[1]
+                except IndexError:
+                    continue
+                b = sum(_shape_bytes(t.group(0))
+                        for t in _SHAPE_RE.finditer(args))
+                out[c] += b
+                count[c] += 1
+                break
+    total = sum(out.values())
+    return {"per_op": out, "counts": count, "total_bytes": total}
+
+
+def _serving_dtype(pshape):
+    """Inference-time weights in bf16 (the production serving dtype):
+    halves parameter HBM reads and FSDP all-gather bytes (§Perf B)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+        if jnp.issubdtype(s.dtype, jnp.floating) else s,
+        pshape,
+    )
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool):
+    cfg = get_config(arch)
+    live, why = cell_is_live(cfg, shape_name)
+    if not live:
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    kind, specs = input_specs(cfg, shape_name)
+    fsdp = arch in FSDP_ARCHS
+    t0 = time.time()
+
+    if kind == "train":
+        pshape, pspecs, in_sh, out_sh = shardings_for_train(
+            model, mesh, specs, fsdp=fsdp
+        )
+        n_micro = MICRO_ARCHS.get(arch, 1)
+        step = make_train_step(model, mesh, fsdp=fsdp, n_micro=n_micro)
+        opt_shape = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), pshape
+        )
+        args = (pshape, opt_shape, opt_shape,
+                jax.ShapeDtypeStruct((), jnp.int32), specs)
+        with mesh:
+            lowered = jax.jit(
+                step, in_shardings=in_sh, out_shardings=out_sh
+            ).lower(*args)
+    elif kind == "prefill":
+        pshape, pspecs, in_sh, out_sh = shardings_for_train(
+            model, mesh, specs, fsdp=fsdp
+        )
+        pshape = _serving_dtype(pshape)  # §Perf: serve with bf16 weights
+        # §Perf B iter-3 (2D activation pinning) measured WORSE on the
+        # dominant collective term (662->881 ms) and is disabled; see
+        # EXPERIMENTS.md §Perf for the refuted-hypothesis record.
+        fn = lambda p, b: model.prefill(p, b)[0]  # logits only (cache inferred)
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=(in_sh[0], in_sh[4])).lower(
+                pshape, specs
+            )
+    else:  # decode
+        pshape, in_sh, out_sh = shardings_for_serve(
+            model, mesh, specs["token"], specs["cache"]
+        )
+        pshape = _serving_dtype(pshape)  # §Perf: serve with bf16 weights
+        step = make_serve_step(model, mesh)
+        with mesh:
+            lowered = jax.jit(
+                step, in_shardings=in_sh, out_shardings=out_sh
+            ).lower(pshape, specs["token"], specs["cache"])
+
+    from repro.models import layers as _layers
+    _layers.ACT_SPEC = None
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)
+
+    n_dev = 512 if multi_pod else 256
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "fsdp": fsdp,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "per_device": {
+            "flops": flops,
+            "bytes_accessed": bytes_acc,
+            "collective_bytes": coll["total_bytes"],
+            "collective_ops": coll["counts"],
+            "collective_per_op_bytes": coll["per_op"],
+        },
+        "memory_analysis": {
+            "argument_size_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_size_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_size_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "peak_bytes": (
+                getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)
+            ),
+        },
+        "roofline_seconds": {
+            "compute": flops / PEAK_FLOPS,
+            "memory": bytes_acc / HBM_BW,
+            "collective": coll["total_bytes"] / LINK_BW,
+        },
+    }
+    terms = result["roofline_seconds"]
+    result["dominant"] = max(terms, key=terms.get)
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", type=str, default=None)
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                cells.append((arch, shape, args.multipod))
+    else:
+        arch = CLI_IDS.get(args.arch, args.arch)
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        for shape in shapes:
+            cells.append((arch, shape, args.multipod))
+
+    results = []
+    for arch, shape, mp in cells:
+        label = f"{arch} x {shape} [{'2x16x16' if mp else '16x16'}]"
+        print(f"=== {label}", flush=True)
+        try:
+            r = lower_cell(arch, shape, mp)
+        except Exception as e:  # a failing cell is a bug — surface it loudly
+            r = {"arch": arch, "shape": shape, "error": f"{type(e).__name__}: {e}"}
+        results.append(r)
+        if "skipped" in r:
+            print(f"    SKIP: {r['skipped']}", flush=True)
+        elif "error" in r:
+            print(f"    ERROR: {r['error']}", flush=True)
+        else:
+            t = r["roofline_seconds"]
+            m = r["memory_analysis"]
+            print(
+                f"    ok: compile {r['compile_s']}s | "
+                f"args {m['argument_size_bytes']/2**30:.2f} GiB "
+                f"temp {m['temp_size_bytes']/2**30:.2f} GiB | "
+                f"compute {t['compute']*1e3:.2f} ms, memory {t['memory']*1e3:.2f} ms, "
+                f"collective {t['collective']*1e3:.2f} ms -> {r['dominant']}-bound",
+                flush=True,
+            )
+    if args.out:
+        out = Path(args.out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        existing = []
+        if out.exists():
+            existing = json.loads(out.read_text())
+            keys = {(r["arch"], r["shape"], r.get("mesh")) for r in results}
+            existing = [
+                r for r in existing
+                if (r["arch"], r["shape"], r.get("mesh")) not in keys
+            ]
+        out.write_text(json.dumps(existing + results, indent=1))
+    n_err = sum("error" in r for r in results)
+    print(f"done: {len(results)} cells, {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,74 @@
+"""Serving launcher: batched prefill + greedy decode loop.
+
+Example:
+  python -m repro.launch.serve --arch rwkv6-3b --reduced \
+      --batch 4 --prompt-len 32 --gen-len 16
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import CLI_IDS, get_config
+from repro.launch.mesh import make_local_mesh
+from repro.models import build_model
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(CLI_IDS.get(args.arch, args.arch), reduced=args.reduced)
+    model = build_model(cfg)
+    rng = np.random.default_rng(0)
+    params = model.init(jax.random.PRNGKey(0))
+
+    b, s = args.batch, args.prompt_len
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(rng.normal(0, 1, (b, s, cfg.d_model)), cfg.cdt)
+    if cfg.family == "vlm":
+        p = min(8, s // 2)
+        batch["patches"] = jnp.asarray(rng.normal(0, 1, (b, p, cfg.d_model)), cfg.cdt)
+        batch["tokens"] = batch["tokens"][:, : s - p]
+
+    max_len = s + args.gen_len
+    prefill = jax.jit(lambda pp, bb: model.prefill(pp, bb, max_len))
+    t0 = time.time()
+    logits, cache = prefill(params, batch)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+
+    decode = jax.jit(model.decode_step)
+    tok = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1).astype(jnp.int32)
+    out_tokens = [np.asarray(tok)]
+    t0 = time.time()
+    for _ in range(args.gen_len - 1):
+        logits_t, cache = decode(params, tok, cache)
+        tok = jnp.argmax(logits_t.astype(jnp.float32), axis=-1).astype(jnp.int32)
+        out_tokens.append(np.asarray(tok))
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+
+    gen = np.stack(out_tokens, axis=1)
+    tps = b * (args.gen_len - 1) / max(t_decode, 1e-9)
+    print(f"prefill: {t_prefill*1e3:.1f} ms for {b}x{s}")
+    print(f"decode:  {t_decode*1e3:.1f} ms for {args.gen_len-1} steps "
+          f"({tps:.1f} tok/s)")
+    print(f"sample generations (token ids):\n{gen[:2, :12]}")
+    assert np.all(gen >= 0) and np.all(gen < cfg.vocab)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,2 @@
+from .common import ModelConfig  # noqa: F401
+from .registry import build_model, input_specs  # noqa: F401

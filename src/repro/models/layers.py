@@ -1,0 +1,252 @@
+"""Core layers: RMSNorm, RoPE, GQA attention (train/prefill/decode), MLPs.
+
+Conventions:
+ * activations: (B, S, D) in cfg.compute_dtype; logits & softmax in f32.
+ * attention uses explicit head layout (B, S, H, Dh).
+ * decode uses a preallocated KV cache (B, S_max, Hkv, Dh) + position index —
+   static shapes throughout (XLA requirement; also the serving layout).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init
+
+
+ACT_SPEC = None  # set by the launcher to a PartitionSpec for activations
+                 # (§Perf B iter-3: pins layer outputs to (batch="data",
+                 #  None, d_model="model") so GSPMD emits reduce-scatter
+                 #  shaped bf16 collectives instead of f32 all-reduces)
+
+
+def constrain_act(x):
+    if ACT_SPEC is not None and x.ndim == 3:
+        return jax.lax.with_sharding_constraint(x, ACT_SPEC)
+    return x
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope(x, positions, theta: float):
+    """x: (B, S, H, Dh), positions: (B, S) int32."""
+    b, s, h, dh = x.shape
+    half = dh // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )  # (half,)
+    ang = positions.astype(jnp.float32)[:, :, None] * freqs[None, None, :]  # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attn_params(key, cfg: ModelConfig, d_model: int | None = None):
+    d = d_model or cfg.d_model
+    dh, h, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, h * dh), cfg.pdt),
+        "wk": dense_init(ks[1], (d, hkv * dh), cfg.pdt),
+        "wv": dense_init(ks[2], (d, hkv * dh), cfg.pdt),
+        "wo": dense_init(ks[3], (h * dh, d), cfg.pdt, fan_in=h * dh),
+    }
+
+
+def _qkv(p, x, cfg: ModelConfig, positions, use_rope=True):
+    b, s, _ = x.shape
+    dh, h, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, h, dh)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(b, s, hkv, dh)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(b, s, hkv, dh)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, causal: bool, q_pos=None, k_valid_len=None):
+    """q: (B,Sq,H,Dh), k/v: (B,Sk,Hkv,Dh); GQA by head repetition.
+
+    Scores/softmax in f32.  If k_valid_len is given (decode), keys beyond it
+    are masked out.
+    """
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    qh = q.reshape(b, sq, hkv, rep, dh)
+    scores = jnp.einsum("bqgrd,bkgd->bgrqk", qh, k).astype(jnp.float32)
+    scores = scores / math.sqrt(dh)
+    sk = k.shape[1]
+    if causal:
+        qp = q_pos if q_pos is not None else jnp.arange(sq)[None, :]
+        kp = jnp.arange(sk)[None, :]
+        mask = kp[:, None, :] <= qp[:, :, None]  # (B, Sq, Sk)
+        scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    if k_valid_len is not None:
+        kp = jnp.arange(sk)[None, :]
+        vmask = kp < k_valid_len[:, None]  # (B, Sk)
+        scores = jnp.where(vmask[:, None, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", w, v)
+    return out.reshape(b, sq, h * dh)
+
+
+BLOCKWISE_THRESHOLD = 4096 * 4096  # Sq*Sk above which the chunked path is used
+Q_CHUNK = 512
+
+
+def blockwise_sdpa(q, k, v, causal: bool, q_chunk=Q_CHUNK):
+    """Memory-bounded attention: scan over Q chunks, each chunk remat'd.
+
+    Live memory is O(q_chunk * Sk) scores instead of O(Sq * Sk) — required
+    for the 32k cells and for training the large dense archs at 4k.  The
+    per-chunk body is jax.checkpoint'd so the backward pass recomputes
+    scores chunk-by-chunk instead of saving them (FlashAttention's memory
+    shape, expressed with XLA-level ops; the MXU does the matmuls)."""
+    b, sq, h, dh = q.shape
+    nq = sq // q_chunk
+    assert sq % q_chunk == 0
+    qc = jnp.moveaxis(q.reshape(b, nq, q_chunk, h, dh), 1, 0)
+    qpos = jnp.arange(sq).reshape(nq, q_chunk)
+
+    @jax.checkpoint
+    def q_step(_, inp):
+        qi, qp = inp
+        out = _sdpa(qi, k, v, causal=causal, q_pos=qp[None, :])
+        return None, out
+
+    _, outs = jax.lax.scan(q_step, None, (qc, qpos))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, h * dh)
+
+
+def sdpa_auto(q, k, v, causal: bool):
+    """Route to blockwise (memory-bounded) attention for large Sq*Sk."""
+    if q.shape[1] * k.shape[1] >= BLOCKWISE_THRESHOLD and q.shape[1] > Q_CHUNK \
+            and q.shape[1] % Q_CHUNK == 0:
+        return blockwise_sdpa(q, k, v, causal=causal)
+    return _sdpa(q, k, v, causal=causal)
+
+
+def attention(p, x, cfg: ModelConfig, positions, causal=True, use_rope=True):
+    q, k, v = _qkv(p, x, cfg, positions, use_rope)
+    out = sdpa_auto(q, k, v, causal=causal)
+    return out @ p["wo"].astype(x.dtype)
+
+
+def attention_decode(p, x, cfg: ModelConfig, cache_k, cache_v, pos, use_rope=True):
+    """One-token decode. x: (B, 1, D); cache: (B, S_max, Hkv, Dh); pos: (B,) int32.
+    Returns (out, new_cache_k, new_cache_v)."""
+    b = x.shape[0]
+    positions = pos[:, None]
+    q, k, v = _qkv(p, x, cfg, positions, use_rope)
+    # scatter the new kv at pos
+    bidx = jnp.arange(b)
+    cache_k = cache_k.at[bidx, pos].set(k[:, 0])
+    cache_v = cache_v.at[bidx, pos].set(v[:, 0])
+    out = _sdpa(q, cache_k, cache_v, causal=False, k_valid_len=pos + 1)
+    return out @ p["wo"].astype(x.dtype), cache_k, cache_v
+
+
+def cross_attention(p, x, kv_feats, cfg: ModelConfig):
+    """Encoder-decoder cross attention (whisper): no RoPE, no causal mask."""
+    b, s, _ = x.shape
+    dh, h, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, h, dh)
+    k = (kv_feats @ p["wk"].astype(x.dtype)).reshape(b, kv_feats.shape[1], hkv, dh)
+    v = (kv_feats @ p["wv"].astype(x.dtype)).reshape(b, kv_feats.shape[1], hkv, dh)
+    out = sdpa_auto(q, k, v, causal=False)
+    return out @ p["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_params(key, cfg: ModelConfig, d_ff: int | None = None):
+    dff = d_ff or cfg.d_ff
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        return {
+            "wi": dense_init(ks[0], (d, dff), cfg.pdt),
+            "wg": dense_init(ks[1], (d, dff), cfg.pdt),
+            "wo": dense_init(ks[2], (dff, d), cfg.pdt, fan_in=dff),
+        }
+    return {
+        "wi": dense_init(ks[0], (d, dff), cfg.pdt),
+        "wo": dense_init(ks[2], (dff, d), cfg.pdt, fan_in=dff),
+    }
+
+
+def mlp(p, x, cfg: ModelConfig):
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["wg"].astype(x.dtype)) * (x @ p["wi"].astype(x.dtype))
+    elif cfg.act == "sq_relu":  # nemotron squared-ReLU
+        h = jnp.square(jax.nn.relu(x @ p["wi"].astype(x.dtype)))
+    else:
+        h = jax.nn.gelu(x @ p["wi"].astype(x.dtype))
+    return h @ p["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits, labels):
+    """logits (B,S,V) any float dtype, labels (B,S) int32; mean over tokens.
+    log-softmax in f32; negative labels are ignored."""
+    l32 = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(l32, axis=-1)
+    ll = jnp.take_along_axis(l32, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = labels >= 0
+    nll = (lse - ll) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)
+
+
+CE_CHUNK = 512
+
+
+def cross_entropy_from_hidden(h, w, labels, chunk: int = CE_CHUNK):
+    """CE without materializing full (B,S,V) logits: scan over S-chunks,
+    each chunk's logits computed + reduced + discarded (remat'd backward).
+
+    For nemotron's 256k vocab at 4k x 256 batch the full-logit path would
+    need >500 GiB of f32 logits globally; this brings live logit memory
+    down to (B, chunk, V).  w: (D, V)."""
+    b, s, d = h.shape
+    if s % chunk or s <= chunk:
+        return cross_entropy((h @ w.astype(h.dtype)), labels)
+    nc = s // chunk
+    hc = jnp.moveaxis(h.reshape(b, nc, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        hi, li = inp
+        logits = (hi @ w.astype(hi.dtype)).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.maximum(li, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = li >= 0
+        return (
+            carry[0] + ((lse - ll) * mask).sum(),
+            carry[1] + mask.sum(dtype=jnp.int32),
+        ), None
+
+    (nll, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.int32(0)), (hc, lc))
+    return nll / jnp.maximum(cnt, 1)

@@ -1,0 +1,108 @@
+"""Mamba2 (SSD) block — selective state-space with scalar-per-head decay.
+
+Per head (head dim P, state N):
+    S_t = exp(dt_t * A) S_{t-1} + dt_t * B_t x_t^T     # S: (N, P)
+    y_t = C_t S_t + D * x_t
+with x,B,C produced by an input projection + short causal conv, dt by a
+softplus-projected scalar per head, and a silu gate z.
+
+Same nested-scan chunking strategy as rwkv.py (checkpoint per chunk).
+Decode keeps (conv tail, S) as the recurrent state — O(1) in context.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init
+from .layers import rmsnorm
+
+CHUNK = 64
+CONV_K = 4
+N_GROUPS = 1  # B/C shared across heads within a group
+
+
+def mamba_dims(cfg: ModelConfig):
+    d_inner = 2 * cfg.d_model
+    n_heads = d_inner // cfg.ssm_headdim
+    return d_inner, n_heads
+
+
+def layer_params(key, cfg: ModelConfig):
+    d = cfg.d_model
+    n = cfg.ssm_state
+    d_inner, nh = mamba_dims(cfg)
+    ks = jax.random.split(key, 4)
+    conv_dim = d_inner + 2 * N_GROUPS * n
+    return {
+        "ln": jnp.ones((d,), jnp.float32),
+        # projects to [z, xc, B, C, dt]
+        "in_proj": dense_init(
+            ks[0], (d, d_inner + conv_dim + nh), cfg.pdt
+        ),
+        "conv_w": dense_init(ks[1], (CONV_K, conv_dim), cfg.pdt, fan_in=CONV_K),
+        "A_log": jnp.zeros((nh,), jnp.float32),      # A = -exp(A_log)
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "out_proj": dense_init(ks[2], (d_inner, d), cfg.pdt, fan_in=d_inner),
+    }
+
+
+def init_layer_state(cfg: ModelConfig, batch: int, dtype):
+    d_inner, nh = mamba_dims(cfg)
+    n = cfg.ssm_state
+    conv_dim = d_inner + 2 * N_GROUPS * n
+    return {
+        "conv": jnp.zeros((batch, CONV_K - 1, conv_dim), dtype),
+        "S": jnp.zeros((batch, nh, n, cfg.ssm_headdim), jnp.float32),
+    }
+
+
+def _causal_conv_chunk(w, x, tail):
+    """x: (B,C,Dc), tail: (B,K-1,Dc) -> (y, new_tail); depthwise causal conv."""
+    xp = jnp.concatenate([tail, x], axis=1)
+    k = w.shape[0]
+    y = sum(xp[:, i : i + x.shape[1]] * w[i][None, None] for i in range(k))
+    return jax.nn.silu(y), xp[:, -(k - 1) :]
+
+
+def mamba_chunk(lp, x, state, cfg: ModelConfig):
+    """x: (B,C,D) -> (y, state')."""
+    b, c, d = x.shape
+    n = cfg.ssm_state
+    d_inner, nh = mamba_dims(cfg)
+    p_dim = cfg.ssm_headdim
+    proj = x @ lp["in_proj"].astype(x.dtype)
+    z = proj[..., :d_inner]
+    conv_in = proj[..., d_inner : d_inner + d_inner + 2 * N_GROUPS * n]
+    dt_raw = proj[..., -nh:]
+    conv_out, new_tail = _causal_conv_chunk(
+        lp["conv_w"].astype(x.dtype), conv_in, state["conv"]
+    )
+    xc = conv_out[..., :d_inner].reshape(b, c, nh, p_dim)
+    Bv = conv_out[..., d_inner : d_inner + N_GROUPS * n].reshape(b, c, N_GROUPS, n)
+    Cv = conv_out[..., d_inner + N_GROUPS * n :].reshape(b, c, N_GROUPS, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp["dt_bias"])  # (B,C,H)
+    A = -jnp.exp(lp["A_log"])                                          # (H,)
+
+    def step(S, inp):
+        x_t, B_t, C_t, dt_t = inp  # (B,H,P), (B,G,N), (B,G,N), (B,H)
+        decay = jnp.exp(dt_t * A[None])                    # (B,H)
+        Bx = (
+            B_t[:, 0][:, None, :, None]
+            * x_t[..., None, :].astype(jnp.float32)
+            * dt_t[..., None, None]
+        )                                                   # (B,H,N,P)
+        S = decay[..., None, None] * S + Bx
+        y = jnp.einsum("bn,bhnp->bhp", C_t[:, 0].astype(jnp.float32), S)
+        return S, y
+
+    xs = jnp.moveaxis(xc, 1, 0)
+    Bs = jnp.moveaxis(Bv, 1, 0)
+    Cs = jnp.moveaxis(Cv, 1, 0)
+    dts = jnp.moveaxis(dt, 1, 0)
+    S, ys = jax.lax.scan(step, state["S"], (xs, Bs, Cs, dts))
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)             # (B,C,H,P)
+    y = y + lp["D"].astype(x.dtype)[None, None, :, None] * xc
+    y = y.reshape(b, c, d_inner) * jax.nn.silu(z)
+    return y @ lp["out_proj"].astype(x.dtype), {"conv": new_tail, "S": S}

@@ -1,0 +1,106 @@
+"""Top-k mixture-of-experts with capacity-bounded scatter/gather dispatch.
+
+Design for EP at scale (granite 32e, kimi-k2 384e):
+ * static shapes everywhere (XLA): per-choice-slot dispatch with a global
+   capacity C = ceil(tokens/E * capacity_factor); overflowing tokens drop
+   that slot (standard capacity dropping).
+ * dispatch/combine are scatter/gather into an (E, C, D) routed buffer whose
+   expert axis is sharded on the "model" mesh axis (EP) — GSPMD turns the
+   scatter into on-device updates + reduce; the roofline counts those
+   collectives (see EXPERIMENTS.md).
+ * expert FFNs run as one batched einsum over the (E, C, D) buffer — MXU
+   friendly, no ragged ops.
+ * router: softmax over experts in f32, top-k, renormalized weights; an
+   auxiliary load-balance loss (Switch-style) is returned for training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init
+
+
+def moe_params(key, cfg: ModelConfig):
+    d, e, ff = cfg.d_model, cfg.n_experts, cfg.expert_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e), jnp.float32),  # router kept in f32
+        "wi": dense_init(ks[1], (e, d, ff), cfg.pdt),
+        "wg": dense_init(ks[2], (e, d, ff), cfg.pdt),
+        "wo": dense_init(ks[3], (e, ff, d), cfg.pdt, fan_in=ff),
+    }
+    if cfg.shared_expert_ff:
+        sf = cfg.shared_expert_ff
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "wi": dense_init(kk[0], (d, sf), cfg.pdt),
+            "wg": dense_init(kk[1], (d, sf), cfg.pdt),
+            "wo": dense_init(kk[2], (sf, d), cfg.pdt, fan_in=sf),
+        }
+    return p
+
+
+def _expert_ffn(p, x):
+    """x: (E, C, D) -> (E, C, D), batched over experts (one big einsum)."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, p["wg"].astype(x.dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", x, p["wi"].astype(x.dtype))
+    return jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(x.dtype))
+
+
+def _expert_ffn_grouped(p, x):
+    """x: (G, E, C, D) -> (G, E, C, D); expert axis stays model-sharded."""
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", x, p["wg"].astype(x.dtype)))
+    h = h * jnp.einsum("gecd,edf->gecf", x, p["wi"].astype(x.dtype))
+    return jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(x.dtype))
+
+
+def moe_ffn(p, x, cfg: ModelConfig):
+    """x: (B, S, D).  Returns (out, aux_loss).
+
+    GROUPED dispatch (§Perf hillclimb A, see EXPERIMENTS.md): tokens are
+    dispatched within their batch row (group = B, which is data-sharded),
+    so the position cumsum and the scatter into the routed buffer are
+    shard-LOCAL — the original global-token dispatch made GSPMD materialize
+    cross-data-shard scatters/all-reduces of the whole (E, C, D) buffer
+    (observed: 635 ms collective on granite train_4k; grouped: ~0).
+    Capacity is per (group, expert): C_g = ceil(S * cf * k / E).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = max(1, int(s * cfg.capacity_factor / e))  # per choice slot
+
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)                     # (B,S,k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance auxiliary loss
+    density = jnp.mean(
+        jax.nn.one_hot(topi[..., 0], e, dtype=jnp.float32), axis=(0, 1)
+    )
+    aux = e * jnp.mean(density * jnp.mean(probs, axis=(0, 1)))
+
+    bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
+    sidx = jnp.arange(s, dtype=jnp.int32)[None, :]
+    out = jnp.zeros((b, s, d), x.dtype)
+    for slot in range(k):
+        eid = topi[..., slot]                                # (B,S)
+        w = topv[..., slot].astype(x.dtype)                  # (B,S)
+        onehot = jax.nn.one_hot(eid, e, dtype=jnp.int32)     # (B,S,E)
+        pos = (jnp.cumsum(onehot, axis=1) - 1)[bidx, sidx, eid]  # (B,S)
+        keep = pos < cap
+        pos_c = jnp.minimum(pos, cap - 1)
+        routed = jnp.zeros((b, e, cap, d), x.dtype)
+        routed = routed.at[bidx, eid, pos_c].add(
+            jnp.where(keep[..., None], x, 0), mode="drop"
+        )
+        ffn_out = _expert_ffn_grouped(p, routed)             # (B,E,C,D)
+        gathered = ffn_out[bidx, eid, pos_c]                 # (B,S,D)
+        out = out + w[..., None] * jnp.where(keep[..., None], gathered, 0)
+
+    if cfg.shared_expert_ff:
+        sp = p["shared"]
+        h = jax.nn.silu(x @ sp["wg"].astype(x.dtype)) * (x @ sp["wi"].astype(x.dtype))
+        out = out + h @ sp["wo"].astype(x.dtype)
+    return out, aux

@@ -1,0 +1,176 @@
+"""Model registry: one uniform interface over the five families, plus
+`input_specs()` producing ShapeDtypeStruct stand-ins for every
+(architecture x input-shape) cell — the dry-run contract (no allocation).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, rwkv, transformer, vlm, zamba
+from .common import ModelConfig
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable[[Any], Any]                    # rng -> params
+    loss: Callable[[Any, dict], jnp.ndarray]      # (params, batch) -> scalar
+    prefill: Callable[..., tuple]                 # (params, batch, max_len)
+    decode_step: Callable[..., tuple]             # (params, token, cache)
+    cache_init: Callable[..., Any]                # (batch, max_len) -> cache
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return Model(
+            cfg=cfg,
+            init=lambda k: transformer.init(k, cfg),
+            loss=lambda p, b: transformer.loss(p, b, cfg),
+            prefill=lambda p, b, ml=None: transformer.prefill(
+                p, b["tokens"], cfg, ml
+            ),
+            decode_step=lambda p, t, c: transformer.decode_step(p, t, c, cfg),
+            cache_init=lambda b, ml: transformer.init_cache(cfg, b, ml, cfg.cdt),
+        )
+    if fam == "rwkv":
+        return Model(
+            cfg=cfg,
+            init=lambda k: rwkv.init(k, cfg),
+            loss=lambda p, b: rwkv.loss(p, b, cfg),
+            prefill=lambda p, b, ml=None: rwkv.prefill(p, b["tokens"], cfg, ml),
+            decode_step=lambda p, t, c: rwkv.decode_step(p, t, c, cfg),
+            cache_init=lambda b, ml: rwkv.init_state(cfg, b, cfg.cdt),
+        )
+    if fam == "zamba":
+        return Model(
+            cfg=cfg,
+            init=lambda k: zamba.init(k, cfg),
+            loss=lambda p, b: zamba.loss(p, b, cfg),
+            prefill=lambda p, b, ml=None: zamba.prefill(p, b["tokens"], cfg, ml),
+            decode_step=lambda p, t, c: zamba.decode_step(p, t, c, cfg),
+            cache_init=lambda b, ml: _zamba_cache(cfg, b, ml),
+        )
+    if fam == "encdec":
+        return Model(
+            cfg=cfg,
+            init=lambda k: encdec.init(k, cfg),
+            loss=lambda p, b: encdec.loss(p, b, cfg),
+            prefill=lambda p, b, ml=None: encdec.prefill(p, b, cfg, ml),
+            decode_step=lambda p, t, c: encdec.decode_step(p, t, c, cfg),
+            cache_init=lambda b, ml: _encdec_cache(cfg, b, ml),
+        )
+    if fam == "vlm":
+        return Model(
+            cfg=cfg,
+            init=lambda k: vlm.init(k, cfg),
+            loss=lambda p, b: vlm.loss(p, b, cfg),
+            prefill=lambda p, b, ml=None: vlm.prefill(p, b, cfg, ml),
+            decode_step=lambda p, t, c: vlm.decode_step(p, t, c, cfg),
+            cache_init=lambda b, ml: transformer.init_cache(cfg, b, ml, cfg.cdt),
+        )
+    raise ValueError(f"unknown family {fam}")
+
+
+def _zamba_cache(cfg, b, ml):
+    n_apps, _, _ = zamba.plan(cfg)
+    return {
+        "mamba": zamba.init_mamba_states(cfg, b, cfg.cdt),
+        "kv": [
+            {
+                "k": jnp.zeros((b, ml, cfg.n_kv, cfg.head_dim), cfg.cdt),
+                "v": jnp.zeros((b, ml, cfg.n_kv, cfg.head_dim), cfg.cdt),
+            }
+            for _ in range(n_apps)
+        ],
+        "pos": jnp.zeros((b,), jnp.int32),
+    }
+
+
+def _encdec_cache(cfg, b, ml):
+    return {
+        "k": jnp.zeros((cfg.n_layers, b, ml, cfg.n_kv, cfg.head_dim), cfg.cdt),
+        "v": jnp.zeros((cfg.n_layers, b, ml, cfg.n_kv, cfg.head_dim), cfg.cdt),
+        "enc": jnp.zeros((b, min(ml, 4096), cfg.d_model), cfg.cdt),
+        "pos": jnp.zeros((b,), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# (arch x shape) cells
+# ---------------------------------------------------------------------------
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+# long_500k needs sub-quadratic context handling (DESIGN.md §5):
+LONG_OK_FAMILIES = ("rwkv", "zamba")
+
+
+def cell_is_live(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k":
+        if cfg.family in LONG_OK_FAMILIES:
+            return True, ""
+        if cfg.family == "encdec":
+            return False, "enc-dec with fixed <=30s audio window (DESIGN §5)"
+        return False, "pure full-attention arch: O(S^2), skipped (DESIGN §5)"
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, batch_override: int | None = None):
+    """ShapeDtypeStruct stand-ins for a cell. Returns (kind, specs dict).
+
+    kind == "train":   specs = batch for loss()
+    kind == "prefill": specs = batch for prefill()
+    kind == "decode":  specs = {token, cache} for decode_step()
+    """
+    sh = SHAPES[shape_name]
+    kind, s, b = sh["kind"], sh["seq"], sh["batch"]
+    if batch_override:
+        b = batch_override
+    i32, cdt = jnp.int32, cfg.cdt
+
+    if kind == "train":
+        if cfg.family == "encdec":
+            return kind, {
+                "frames": _sds((b, s, cfg.d_model), cdt),
+                "tokens": _sds((b, s), i32),
+                "labels": _sds((b, s), i32),
+            }
+        if cfg.family == "vlm":
+            p = min(1024, s // 4)
+            return kind, {
+                "patches": _sds((b, p, cfg.d_model), cdt),
+                "tokens": _sds((b, s - p), i32),
+                "labels": _sds((b, s - p), i32),
+            }
+        return kind, {"tokens": _sds((b, s), i32), "labels": _sds((b, s), i32)}
+
+    if kind == "prefill":
+        if cfg.family == "encdec":
+            return kind, {
+                "frames": _sds((b, s, cfg.d_model), cdt),
+                "tokens": _sds((b, s), i32),
+            }
+        if cfg.family == "vlm":
+            p = min(1024, s // 4)
+            return kind, {
+                "patches": _sds((b, p, cfg.d_model), cdt),
+                "tokens": _sds((b, s - p), i32),
+            }
+        return kind, {"tokens": _sds((b, s), i32)}
+
+    # decode: one new token against a cache of length s
+    model = build_model(cfg)
+    cache = jax.eval_shape(lambda: model.cache_init(b, s))
+    return kind, {"token": _sds((b,), i32), "cache": cache}

@@ -1,0 +1,197 @@
+"""RWKV-6 ("Finch") — attention-free LM with data-dependent per-channel decay.
+
+Time mixing (per head, head dim N):
+    w_t = exp(-exp(w0 + tanh(x_t A) B))          # data-dependent decay (LoRA)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          # state (N x N)
+    y_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+Channel mixing: squared-ReLU FFN with token shift.
+
+Sequence processing = nested scan: outer scan over chunks (jax.checkpoint'd
+— only chunk-boundary states are saved for backward), inner scan over time
+steps.  Decode is a single state update — NO KV cache, O(1) memory in
+context length: this is why rwkv6 runs the long_500k cell (DESIGN.md §5).
+
+Simplification vs. the released model (documented): static token-shift
+lerp instead of data-dependent lerp; no gate LoRA.  Parameter count matches
+the 3B config within ~2%.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init, embed_init
+from .layers import cross_entropy, rmsnorm
+
+LORA_R = 64
+CHUNK = 64
+
+
+def layer_params(key, cfg: ModelConfig):
+    d, h, n = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 12)
+    return {
+        "ln1": jnp.ones((d,), jnp.float32),
+        "ln2": jnp.ones((d,), jnp.float32),
+        "mu": 0.5 * jnp.ones((5, d), jnp.float32),  # r,k,v,w,g token-shift mix
+        "wr": dense_init(ks[0], (d, h * n), cfg.pdt),
+        "wk": dense_init(ks[1], (d, h * n), cfg.pdt),
+        "wv": dense_init(ks[2], (d, h * n), cfg.pdt),
+        "wg": dense_init(ks[3], (d, h * n), cfg.pdt),
+        "wo": dense_init(ks[4], (h * n, d), cfg.pdt, fan_in=h * n),
+        "w0": -6.0 * jnp.ones((h * n,), jnp.float32),
+        "wA": dense_init(ks[5], (d, LORA_R), jnp.float32),
+        "wB": dense_init(ks[6], (LORA_R, h * n), jnp.float32) * 0.1,
+        "u": jnp.zeros((h, n), jnp.float32),
+        "ln_x": jnp.ones((h * n,), jnp.float32),  # group-norm on y
+        "cm_k": dense_init(ks[7], (d, cfg.d_ff), cfg.pdt),
+        "cm_v": dense_init(ks[8], (cfg.d_ff, d), cfg.pdt, fan_in=cfg.d_ff),
+        "cm_r": dense_init(ks[9], (d, d), cfg.pdt),
+        "mu_cm": 0.5 * jnp.ones((2, d), jnp.float32),
+    }
+
+
+def init(key, cfg: ModelConfig):
+    ke, kl, ko = jax.random.split(key, 3)
+    keys = jax.random.split(kl, cfg.n_layers)
+    return {
+        "embed": embed_init(ke, (cfg.vocab, cfg.d_model), cfg.pdt),
+        "layers": jax.vmap(lambda k: layer_params(k, cfg))(keys),
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+        "unembed": dense_init(ko, (cfg.d_model, cfg.vocab), cfg.pdt),
+    }
+
+
+def _shift(x, prev):
+    """x: (B,S,D); prev: (B,D) last token of previous chunk."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _time_mix_chunk(lp, x, x_prev, S, cfg: ModelConfig):
+    """x: (B,C,D); S: (B,H,N,N) f32; returns (y, x_last, S')."""
+    b, c, d = x.shape
+    h, n = cfg.n_heads, cfg.head_dim
+    xs = _shift(x, x_prev)
+    mu = lp["mu"].astype(x.dtype)
+    xr, xk, xv, xw, xg = (x + mu[i][None, None] * (xs - x) for i in range(5))
+    r = (xr @ lp["wr"].astype(x.dtype)).reshape(b, c, h, n)
+    k = (xk @ lp["wk"].astype(x.dtype)).reshape(b, c, h, n)
+    v = (xv @ lp["wv"].astype(x.dtype)).reshape(b, c, h, n)
+    g = jax.nn.silu(xg @ lp["wg"].astype(x.dtype))
+    logw = -jnp.exp(
+        lp["w0"][None, None]
+        + jnp.tanh(xw.astype(jnp.float32) @ lp["wA"]) @ lp["wB"]
+    ).reshape(b, c, h, n)                       # (B,C,H,N) f32, <= 0
+    w = jnp.exp(logw)
+    u = lp["u"]
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                # (B,H,N) each
+        kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,N,N)
+        y = jnp.einsum(
+            "bhn,bhnm->bhm", r_t.astype(jnp.float32),
+            S + u[None, :, :, None] * kv.astype(jnp.float32),
+        )
+        S = w_t.astype(jnp.float32)[..., None] * S + kv.astype(jnp.float32)
+        return S, y
+
+    rs, ks_, vs, ws = (jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    S, ys = jax.lax.scan(step, S, (rs, ks_, vs, ws))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, c, h * n).astype(x.dtype)
+    y = rmsnorm(y, lp["ln_x"]) * g
+    return y @ lp["wo"].astype(x.dtype), x[:, -1], S
+
+
+def _channel_mix(lp, x, x_prev, cfg: ModelConfig):
+    xs = _shift(x, x_prev)
+    mu = lp["mu_cm"].astype(x.dtype)
+    xk = x + mu[0][None, None] * (xs - x)
+    xr = x + mu[1][None, None] * (xs - x)
+    k = jnp.square(jax.nn.relu(xk @ lp["cm_k"].astype(x.dtype)))
+    return jax.nn.sigmoid(xr @ lp["cm_r"].astype(x.dtype)) * (
+        k @ lp["cm_v"].astype(x.dtype)
+    ), x[:, -1]
+
+
+def _layer_chunk(lp, x, state, cfg: ModelConfig):
+    """One layer over one chunk. state = (x_prev_tm, x_prev_cm, S)."""
+    x_tm, x_cm, S = state
+    a, x_tm, S = _time_mix_chunk(lp, rmsnorm(x, lp["ln1"]), x_tm, S, cfg)
+    x = x + a
+    f, x_cm = _channel_mix(lp, rmsnorm(x, lp["ln2"]), x_cm, cfg)
+    return x + f, (x_tm, x_cm, S)
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype):
+    d, h, n = cfg.d_model, cfg.n_heads, cfg.head_dim
+    one = {
+        "x_tm": jnp.zeros((cfg.n_layers, batch, d), dtype),
+        "x_cm": jnp.zeros((cfg.n_layers, batch, d), dtype),
+        "S": jnp.zeros((cfg.n_layers, batch, h, n, n), jnp.float32),
+    }
+    return one
+
+
+def backbone(params, x, cfg: ModelConfig, state=None):
+    """x: (B,S,D) with S % CHUNK == 0 (caller pads). Scan chunks x layers."""
+    b, s, d = x.shape
+    chunk = min(CHUNK, s)
+    assert s % chunk == 0
+    nchunks = s // chunk
+    st = state or init_state(cfg, b, x.dtype)
+
+    @jax.checkpoint
+    def chunk_body(carry, xc):
+        stc = carry
+
+        def layer_body(h, inp):
+            lp, xtm, xcm, S = inp
+            h, (xtm, xcm, S) = _layer_chunk(lp, h, (xtm, xcm, S), cfg)
+            return h, (xtm, xcm, S)
+
+        h, (xtm, xcm, S) = jax.lax.scan(
+            layer_body, xc, (params["layers"], stc["x_tm"], stc["x_cm"], stc["S"])
+        )
+        return {"x_tm": xtm, "x_cm": xcm, "S": S}, h
+
+    xc = jnp.moveaxis(x.reshape(b, nchunks, chunk, d), 1, 0)
+    st, hs = jax.lax.scan(chunk_body, st, xc)
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, d)
+    return rmsnorm(h, params["ln_f"]), st
+
+
+def forward(params, tokens, cfg: ModelConfig):
+    x = params["embed"].astype(cfg.cdt)[tokens]
+    h, _ = backbone(params, x, cfg)
+    return h @ params["unembed"].astype(h.dtype), jnp.float32(0)
+
+
+def loss(params, batch, cfg: ModelConfig):
+    x = params["embed"].astype(cfg.cdt)[batch["tokens"]]
+    h, _ = backbone(params, x, cfg)
+    from .layers import cross_entropy_from_hidden
+
+    return cross_entropy_from_hidden(h, params["unembed"], batch["labels"])
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_len=None):
+    x = params["embed"].astype(cfg.cdt)[tokens]
+    h, st = backbone(params, x, cfg)
+    logits = h[:, -1:] @ params["unembed"].astype(h.dtype)
+    return logits, st
+
+
+def decode_step(params, token, state, cfg: ModelConfig):
+    x = params["embed"].astype(cfg.cdt)[token][:, None]  # (B,1,D)
+
+    def layer_body(h, inp):
+        lp, xtm, xcm, S = inp
+        h, (xtm, xcm, S) = _layer_chunk(lp, h, (xtm, xcm, S), cfg)
+        return h, (xtm, xcm, S)
+
+    h, (xtm, xcm, S) = jax.lax.scan(
+        layer_body, x, (params["layers"], state["x_tm"], state["x_cm"], state["S"])
+    )
+    h = rmsnorm(h, params["ln_f"])
+    logits = h[:, 0] @ params["unembed"].astype(h.dtype)
+    return logits, {"x_tm": xtm, "x_cm": xcm, "S": S}

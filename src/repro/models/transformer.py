@@ -1,0 +1,189 @@
+"""Decoder-only transformer LM (dense + MoE variants).
+
+Layer stack is a `lax.scan` over STACKED per-layer params with
+`jax.checkpoint` on the body (remat) — O(1) HLO in depth, O(L) recompute in
+backward, the standard large-model memory/compute trade.
+
+Interface (shared by all families via registry.build_model):
+    init(rng)                        -> params
+    loss(params, batch)              -> scalar f32      # batch: tokens/labels
+    prefill(params, tokens)          -> (logits_last, cache)
+    decode_step(params, token, cache)-> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init, embed_init
+from .layers import (
+    attention,
+    attention_decode,
+    attn_params,
+    cross_entropy,
+    mlp,
+    mlp_params,
+    rmsnorm,
+)
+from .moe import moe_ffn, moe_params
+
+
+def layer_params(key, cfg: ModelConfig):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": attn_params(k1, cfg),
+    }
+    p["ffn"] = moe_params(k2, cfg) if cfg.is_moe else mlp_params(k3, cfg)
+    return p
+
+
+def stacked_layer_params(key, cfg: ModelConfig):
+    keys = jax.random.split(key, cfg.n_layers)
+    return jax.vmap(lambda k: layer_params(k, cfg))(keys)
+
+
+def init(key, cfg: ModelConfig):
+    ke, kl, ko = jax.random.split(key, 3)
+    p = {
+        "embed": embed_init(ke, (cfg.vocab, cfg.d_model), cfg.pdt),
+        "layers": stacked_layer_params(kl, cfg),
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(ko, (cfg.d_model, cfg.vocab), cfg.pdt)
+    return p
+
+
+def _layer_fwd(lp, x, cfg: ModelConfig, positions):
+    h = x + attention(lp["attn"], rmsnorm(x, lp["ln1"]), cfg, positions)
+    hn = rmsnorm(h, lp["ln2"])
+    if cfg.is_moe:
+        f, aux = moe_ffn(lp["ffn"], hn, cfg)
+    else:
+        f, aux = mlp(lp["ffn"], hn, cfg), jnp.float32(0)
+    return h + f, aux
+
+
+def backbone(params, x, cfg: ModelConfig, positions):
+    """x: (B, S, D) embeddings -> (B, S, D) + aux loss; scan over layers."""
+
+    @jax.checkpoint
+    def body(carry, lp):
+        h, aux = carry
+        h, a = _layer_fwd(lp, h, cfg, positions)
+        return (h, aux + a), None
+
+    (h, aux), _ = jax.lax.scan(body, (x, jnp.float32(0)), params["layers"])
+    return rmsnorm(h, params["ln_f"]), aux / cfg.n_layers
+
+
+def logits_fn(params, h, cfg: ModelConfig):
+    w = params.get("unembed")
+    if w is None:
+        w = params["embed"].T
+    return h @ w.astype(h.dtype)
+
+
+def forward(params, tokens, cfg: ModelConfig):
+    b, s = tokens.shape
+    x = params["embed"].astype(cfg.cdt)[tokens]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    h, aux = backbone(params, x, cfg, positions)
+    return logits_fn(params, h, cfg), aux
+
+
+def loss(params, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"].astype(cfg.cdt)[tokens]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    h, aux = backbone(params, x, cfg, positions)
+    w = params.get("unembed")
+    if w is None:
+        w = params["embed"].T
+    from .layers import cross_entropy_from_hidden
+
+    return cross_entropy_from_hidden(h, w, batch["labels"]) + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode with static KV cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    return {
+        "k": jnp.zeros(
+            (cfg.n_layers, batch, max_len, cfg.n_kv, cfg.head_dim), dtype
+        ),
+        "v": jnp.zeros(
+            (cfg.n_layers, batch, max_len, cfg.n_kv, cfg.head_dim), dtype
+        ),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_len: int | None = None):
+    """Run the full prompt, return (last-token logits, populated cache).
+
+    The cache is filled by recomputing K/V per layer (scan) — one pass.
+    """
+    b, s = tokens.shape
+    max_len = max_len or s
+    x = params["embed"].astype(cfg.cdt)[tokens]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    from .layers import _qkv  # reuse projection
+
+    def body(carry, lp):
+        h = carry
+        hn = rmsnorm(h, lp["ln1"])
+        q, k, v = _qkv(lp["attn"], hn, cfg, positions)
+        from .layers import sdpa_auto
+
+        att = sdpa_auto(q, k, v, causal=True)
+        h = h + att @ lp["attn"]["wo"].astype(h.dtype)
+        from .layers import constrain_act
+        h = constrain_act(h)
+        hn2 = rmsnorm(h, lp["ln2"])
+        if cfg.is_moe:
+            f, _ = moe_ffn(lp["ffn"], hn2, cfg)
+        else:
+            f = mlp(lp["ffn"], hn2, cfg)
+        kpad = jnp.zeros((b, max_len - s, cfg.n_kv, cfg.head_dim), k.dtype)
+        hf = constrain_act(h + f)
+        return hf, (jnp.concatenate([k, kpad], 1), jnp.concatenate([v, kpad], 1))
+
+    h, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    h = rmsnorm(h, params["ln_f"])
+    cache = {"k": ks, "v": vs, "pos": jnp.full((b,), s, jnp.int32)}
+    return logits_fn(params, h[:, -1:], cfg), cache
+
+
+def decode_step(params, token, cache, cfg: ModelConfig):
+    """token: (B,) int32 -> (logits (B, V), new cache)."""
+    b = token.shape[0]
+    x = params["embed"].astype(cfg.cdt)[token][:, None]  # (B, 1, D)
+    pos = cache["pos"]
+
+    def body(carry, layer):
+        h = carry
+        lp, ck, cv = layer
+        hn = rmsnorm(h, lp["ln1"])
+        att, nk, nv = attention_decode(lp["attn"], hn, cfg, ck, cv, pos)
+        h = h + att
+        hn2 = rmsnorm(h, lp["ln2"])
+        if cfg.is_moe:
+            f, _ = moe_ffn(lp["ffn"], hn2, cfg)
+        else:
+            f = mlp(lp["ffn"], hn2, cfg)
+        return h + f, (nk, nv)
+
+    h, (nks, nvs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    h = rmsnorm(h, params["ln_f"])
+    logits = logits_fn(params, h[:, 0], cfg)
+    return logits, {"k": nks, "v": nvs, "pos": pos + 1}

@@ -1,0 +1,96 @@
+"""Pixtral-style VLM backbone: patch-embedding prefix + text decoder.
+
+The Pixtral ViT frontend is a STUB per the brief: `input_specs()` provides
+precomputed patch embeddings (B, P, D) (what the vision tower + projector
+would produce), concatenated in front of the text tokens.  The language
+backbone is the mistral-nemo-like dense decoder reused from transformer.py;
+loss is computed on text positions only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer as TF
+from .common import ModelConfig
+from .layers import cross_entropy
+
+
+def init(key, cfg: ModelConfig):
+    return TF.init(key, cfg)
+
+
+def forward(params, batch, cfg: ModelConfig):
+    patches = batch["patches"].astype(cfg.cdt)       # (B, P, D)
+    tokens = batch["tokens"]                          # (B, S_text)
+    b, p, d = patches.shape
+    s = tokens.shape[1]
+    x = jnp.concatenate([patches, params["embed"].astype(cfg.cdt)[tokens]], axis=1)
+    positions = jnp.broadcast_to(
+        jnp.arange(p + s, dtype=jnp.int32)[None], (b, p + s)
+    )
+    h, aux = TF.backbone(params, x, cfg, positions)
+    logits = TF.logits_fn(params, h[:, p:], cfg)      # text positions only
+    return logits, aux
+
+
+def loss(params, batch, cfg: ModelConfig):
+    patches = batch["patches"].astype(cfg.cdt)
+    tokens = batch["tokens"]
+    b, p, d = patches.shape
+    s = tokens.shape[1]
+    x = jnp.concatenate([patches, params["embed"].astype(cfg.cdt)[tokens]], axis=1)
+    positions = jnp.broadcast_to(
+        jnp.arange(p + s, dtype=jnp.int32)[None], (b, p + s)
+    )
+    h, aux = TF.backbone(params, x, cfg, positions)
+    w = params.get("unembed")
+    if w is None:
+        w = params["embed"].T
+    from .layers import cross_entropy_from_hidden
+
+    return cross_entropy_from_hidden(h[:, p:], w, batch["labels"]) + 0.01 * aux
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len: int | None = None):
+    """Prefill over [patches; tokens]; returns (last logits, cache).
+
+    Uses the dense-transformer prefill on the concatenated embedding stream
+    (cache covers image+text positions, as pixtral serving does)."""
+    patches = batch["patches"].astype(cfg.cdt)
+    tokens = batch["tokens"]
+    b, p, d = patches.shape
+    s = tokens.shape[1]
+    max_len = max_len or (p + s)
+    x = jnp.concatenate([patches, params["embed"].astype(cfg.cdt)[tokens]], axis=1)
+    positions = jnp.broadcast_to(
+        jnp.arange(p + s, dtype=jnp.int32)[None], (b, p + s)
+    )
+    from .layers import _qkv, sdpa_auto
+    from .layers import mlp, rmsnorm
+    from .moe import moe_ffn
+
+    st = p + s
+
+    def body(carry, lp):
+        h = carry
+        hn = rmsnorm(h, lp["ln1"])
+        q, k, v = _qkv(lp["attn"], hn, cfg, positions)
+        att = sdpa_auto(q, k, v, causal=True)
+        h = h + att @ lp["attn"]["wo"].astype(h.dtype)
+        f = mlp(lp["ffn"], rmsnorm(h, lp["ln2"]), cfg)
+        pad = max_len - st
+        kp = jnp.concatenate([k, jnp.zeros((b, pad) + k.shape[2:], k.dtype)], 1)
+        vp = jnp.concatenate([v, jnp.zeros((b, pad) + v.shape[2:], v.dtype)], 1)
+        return h + f, (kp, vp)
+
+    h, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    from .layers import rmsnorm as _rn
+
+    h = _rn(h, params["ln_f"])
+    logits = TF.logits_fn(params, h[:, -1:], cfg)
+    return logits, {"k": ks, "v": vs, "pos": jnp.full((b,), st, jnp.int32)}
+
+
+def decode_step(params, token, cache, cfg: ModelConfig):
+    return TF.decode_step(params, token, cache, cfg)

@@ -1,0 +1,231 @@
+"""Zamba2-style hybrid: Mamba2 backbone with a SHARED attention block
+applied periodically (weight re-use across applications — the Zamba trick).
+
+Config mapping for zamba2-7b (81L): 75 Mamba2 blocks + 6 applications of one
+shared transformer block, one application after every 12 mamba blocks
+(12m a 12m a ... + 3m tail).  DESIGN.md records this structural
+approximation (the released model interleaves two shared blocks + per-use
+LoRA; parameter count matches within a few %).
+
+Decode state: per-mamba (conv tail, SSD state) + per-APPLICATION KV cache
+for the shared block (shared weights, separate caches).  At 500k context
+the KV cache exists only for the 6 shared-attn applications — this is why
+the hybrid runs the long_500k cell at all (DESIGN.md §5 skip table).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import mamba as M
+from .common import ModelConfig, dense_init, embed_init
+from .layers import (
+    attention,
+    attention_decode,
+    attn_params,
+    cross_entropy,
+    mlp,
+    mlp_params,
+    rmsnorm,
+)
+
+SEG_DEFAULT = 12  # mamba blocks between shared-attn applications
+
+
+def plan(cfg: ModelConfig):
+    """n_layers -> (n_apps, seg_sizes). 81 -> 6 apps, segs [12]*6 + tail 3."""
+    seg = cfg.attn_every or SEG_DEFAULT
+    n_apps = cfg.n_layers // (seg + 1)
+    n_mamba = cfg.n_layers - n_apps
+    segs = [seg] * n_apps
+    tail = n_mamba - seg * n_apps
+    return n_apps, segs, tail
+
+
+def init(key, cfg: ModelConfig):
+    n_apps, segs, tail = plan(cfg)
+    n_mamba = sum(segs) + tail
+    ke, km, ka, ko = jax.random.split(key, 4)
+    mkeys = jax.random.split(km, n_mamba)
+    k1, k2 = jax.random.split(ka)
+    shared = {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": attn_params(k1, cfg),
+        "ffn": mlp_params(k2, cfg),
+    }
+    return {
+        "embed": embed_init(ke, (cfg.vocab, cfg.d_model), cfg.pdt),
+        "mamba": jax.vmap(lambda k: M.layer_params(k, cfg))(mkeys),
+        "shared": shared,
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+        "unembed": dense_init(ko, (cfg.d_model, cfg.vocab), cfg.pdt),
+    }
+
+
+def _slice_tree(tree, a, b):
+    return jax.tree.map(lambda p: p[a:b], tree)
+
+
+def _mamba_stack(params_seg, x, states_seg, cfg):
+    """Chunked scan over time x scan over the segment's mamba layers."""
+    b, s, d = x.shape
+    chunk = min(M.CHUNK, s)
+    nchunks = s // chunk
+
+    @jax.checkpoint
+    def chunk_body(carry, xc):
+        st = carry
+
+        def layer_body(h, inp):
+            """residual form: y = x + mamba(norm(x))"""
+            lp, conv, S = inp
+            y, ns = M.mamba_chunk(lp, rmsnorm(h, lp["ln"]), {"conv": conv, "S": S}, cfg)
+            return h + y, (ns["conv"], ns["S"])
+
+        h, (convs, Ss) = jax.lax.scan(
+            layer_body, xc, (params_seg, st["conv"], st["S"])
+        )
+        return {"conv": convs, "S": Ss}, h
+
+    xc = jnp.moveaxis(x.reshape(b, nchunks, chunk, d), 1, 0)
+    states_seg, hs = jax.lax.scan(chunk_body, states_seg, xc)
+    return jnp.moveaxis(hs, 0, 1).reshape(b, s, d), states_seg
+
+
+def backbone(params, x, cfg: ModelConfig, positions):
+    n_apps, segs, tail = plan(cfg)
+    b, s, d = x.shape
+    states = init_mamba_states(cfg, b, x.dtype)
+    off = 0
+    h = x
+    for i, seg in enumerate(segs):
+        pseg = _slice_tree(params["mamba"], off, off + seg)
+        sseg = _slice_tree(states, off, off + seg)
+        h, _ = _mamba_stack(pseg, h, sseg, cfg)
+        sp = params["shared"]
+        h = h + attention(sp["attn"], rmsnorm(h, sp["ln1"]), cfg, positions)
+        h = h + mlp(sp["ffn"], rmsnorm(h, sp["ln2"]), cfg)
+        off += seg
+    if tail:
+        pseg = _slice_tree(params["mamba"], off, off + tail)
+        sseg = _slice_tree(states, off, off + tail)
+        h, _ = _mamba_stack(pseg, h, sseg, cfg)
+    return rmsnorm(h, params["ln_f"])
+
+
+def init_mamba_states(cfg: ModelConfig, batch: int, dtype):
+    n_apps, segs, tail = plan(cfg)
+    n_mamba = sum(segs) + tail
+    one = M.init_layer_state(cfg, batch, dtype)
+    return jax.tree.map(
+        lambda p: jnp.zeros((n_mamba,) + p.shape, p.dtype), one
+    )
+
+
+def forward(params, tokens, cfg: ModelConfig):
+    b, s = tokens.shape
+    x = params["embed"].astype(cfg.cdt)[tokens]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    h = backbone(params, x, cfg, positions)
+    return h @ params["unembed"].astype(h.dtype), jnp.float32(0)
+
+
+def loss(params, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"].astype(cfg.cdt)[tokens]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    h = backbone(params, x, cfg, positions)
+    from .layers import cross_entropy_from_hidden
+
+    return cross_entropy_from_hidden(h, params["unembed"], batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def prefill(params, tokens, cfg: ModelConfig, max_len: int | None = None):
+    """Returns (last logits, state) where state carries mamba states and the
+    shared-attn KV caches (one per application)."""
+    n_apps, segs, tail = plan(cfg)
+    b, s = tokens.shape
+    max_len = max_len or s
+    x = params["embed"].astype(cfg.cdt)[tokens]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    states = init_mamba_states(cfg, b, x.dtype)
+    new_states = []
+    caches = []
+    from .layers import _qkv, sdpa_auto
+
+    h = x
+    off = 0
+    for i, seg in enumerate(segs):
+        pseg = _slice_tree(params["mamba"], off, off + seg)
+        sseg = _slice_tree(states, off, off + seg)
+        h, ns = _mamba_stack(pseg, h, sseg, cfg)
+        new_states.append(ns)
+        sp = params["shared"]
+        hn = rmsnorm(h, sp["ln1"])
+        q, k, v = _qkv(sp["attn"], hn, cfg, positions)
+        att = sdpa_auto(q, k, v, causal=True)
+        h = h + att @ sp["attn"]["wo"].astype(h.dtype)
+        h = h + mlp(sp["ffn"], rmsnorm(h, sp["ln2"]), cfg)
+        pad = max_len - s
+        kp = jnp.concatenate([k, jnp.zeros((b, pad) + k.shape[2:], k.dtype)], 1)
+        vp = jnp.concatenate([v, jnp.zeros((b, pad) + v.shape[2:], v.dtype)], 1)
+        caches.append((kp, vp))
+        off += seg
+    if tail:
+        pseg = _slice_tree(params["mamba"], off, off + tail)
+        sseg = _slice_tree(states, off, off + tail)
+        h, ns = _mamba_stack(pseg, h, sseg, cfg)
+        new_states.append(ns)
+    h = rmsnorm(h, params["ln_f"])
+    logits = h[:, -1:] @ params["unembed"].astype(h.dtype)
+    mamba_state = jax.tree.map(
+        lambda *xs: jnp.concatenate(xs, axis=0), *new_states
+    )
+    state = {
+        "mamba": mamba_state,
+        "kv": [
+            {"k": c[0], "v": c[1]} for c in caches
+        ],
+        "pos": jnp.full((b,), s, jnp.int32),
+    }
+    return logits, state
+
+
+def decode_step(params, token, state, cfg: ModelConfig):
+    n_apps, segs, tail = plan(cfg)
+    b = token.shape[0]
+    x = params["embed"].astype(cfg.cdt)[token][:, None]
+    pos = state["pos"]
+    h = x
+    off = 0
+    new_states = []
+    new_kv = []
+    for i, seg in enumerate(segs):
+        pseg = _slice_tree(params["mamba"], off, off + seg)
+        sseg = _slice_tree(state["mamba"], off, off + seg)
+        h, ns = _mamba_stack(pseg, h, sseg, cfg)
+        new_states.append(ns)
+        sp = params["shared"]
+        hn = rmsnorm(h, sp["ln1"])
+        att, nk, nv = attention_decode(
+            sp["attn"], hn, cfg, state["kv"][i]["k"], state["kv"][i]["v"], pos
+        )
+        h = h + att
+        h = h + mlp(sp["ffn"], rmsnorm(h, sp["ln2"]), cfg)
+        new_kv.append({"k": nk, "v": nv})
+        off += seg
+    if tail:
+        pseg = _slice_tree(params["mamba"], off, off + tail)
+        sseg = _slice_tree(state["mamba"], off, off + tail)
+        h, ns = _mamba_stack(pseg, h, sseg, cfg)
+        new_states.append(ns)
+    h = rmsnorm(h, params["ln_f"])
+    logits = h[:, 0] @ params["unembed"].astype(h.dtype)
+    mamba_state = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *new_states)
+    return logits, {"mamba": mamba_state, "kv": new_kv, "pos": pos + 1}

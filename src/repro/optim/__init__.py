@@ -1,0 +1,2 @@
+from .adamw import AdamWState, adamw_init, adamw_update, global_norm  # noqa: F401
+from .schedules import cosine_schedule, wsd_schedule  # noqa: F401

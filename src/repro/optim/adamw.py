@@ -1,0 +1,70 @@
+"""AdamW with gradient clipping — pure JAX, explicit f32 state (no optax).
+
+State layout (m, v in f32, params updated in their own dtype) is what the
+compressed checkpointing path sees: the f32 moment tensors are the largest
+and most compressible arrays in a training job (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray     # int32 scalar
+    m: Any                # f32 pytree like params
+    v: Any                # f32 pytree like params
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    lr,
+    *,
+    b1=0.9,
+    b2=0.95,
+    eps=1e-8,
+    weight_decay=0.1,
+    clip_norm=1.0,
+):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1 - b1**t
+    bc2 = 1 - b2**t
+
+    m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, state.m, grads)
+    v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * g * g, state.v, grads)
+
+    def upd(p, mm, vv):
+        u = (mm / bc1) / (jnp.sqrt(vv / bc2) + eps)
+        u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, AdamWState(step=step, m=m, v=v), {
+        "grad_norm": gnorm,
+        "lr": jnp.asarray(lr, jnp.float32),
+    }

@@ -1,0 +1,29 @@
+"""LR schedules: cosine and WSD (warmup-stable-decay, the minicpm-2b
+schedule [arXiv:2404.06395])."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = base_lr * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0, 1)
+        cos = 0.5 * base_lr * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+
+    return lr
+
+
+def wsd_schedule(base_lr: float, warmup: int, stable: int, decay: int,
+                 final_frac: float = 0.1):
+    """Warmup -> flat -> short exponential decay to final_frac*base_lr."""
+    def lr(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = base_lr * s / max(warmup, 1)
+        in_decay = jnp.clip((s - warmup - stable) / max(decay, 1), 0, 1)
+        dec = base_lr * jnp.power(final_frac, in_decay)
+        return jnp.where(s < warmup, warm, jnp.where(s < warmup + stable, base_lr, dec))
+
+    return lr

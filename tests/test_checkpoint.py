@@ -1,0 +1,131 @@
+"""Checkpoint manager: bitwise round-trip, atomicity, retention, elasticity,
+and the data pipeline's O(1) resume."""
+import json
+import os
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, restore_tree, save_tree
+from repro.data.shard_store import ShardStore
+from repro.data.tokens import TokenStream
+
+
+def mk_tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.normal(0, 0.02, (128, 256)), jnp.float32),
+        "moments": {
+            "m": jnp.asarray(rng.normal(0, 1e-4, (128, 256)), jnp.float32),
+            "v": jnp.asarray(rng.random((128, 256)) * 1e-6, jnp.float32),
+        },
+        "emb_bf16": jnp.asarray(rng.normal(0, 1, (64, 32)), jnp.bfloat16),
+        "step": jnp.asarray(1234, jnp.int32),
+        "table_f64": jnp.asarray(rng.uniform(1, 2, 1000), jnp.float64),
+    }
+
+
+def bits(x):
+    x = np.asarray(x)
+    if x.dtype == jax.numpy.bfloat16.dtype:
+        return x.view(np.uint16)
+    return x.view({8: np.uint64, 4: np.uint32}[x.dtype.itemsize]) if \
+        x.dtype.kind == "f" else x
+
+
+def test_save_restore_bitwise(tmp_path):
+    tree = mk_tree()
+    stats = save_tree(tree, tmp_path / "ck", extra={"hello": 1})
+    got, extra = restore_tree(tmp_path / "ck")
+    assert extra["hello"] == 1
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        assert np.array_equal(bits(a), bits(b))
+    assert stats["ratio"] < 1.0  # compression actually happened
+
+
+def test_compression_on_adam_moments(tmp_path):
+    """Adam v-moments: max-entropy mantissas bound the lossless gain to the
+    sign+exponent structure (~6-9 of 32 bits here); assert we capture most
+    of that bound."""
+    rng = np.random.default_rng(1)
+    v = jnp.asarray((rng.random(200_000) * 1e-6 + 1e-7), jnp.float32)
+    stats = save_tree({"v": v}, tmp_path / "ck")
+    assert stats["ratio"] < 0.92, stats
+
+
+def test_compression_on_structured_params(tmp_path):
+    """Fresh layer params: norm scales (constant), zero biases, quantized
+    embedding rows — the structured arrays real checkpoints are full of."""
+    rng = np.random.default_rng(2)
+    tree = {
+        "ln": jnp.ones((4096,), jnp.float32),
+        "bias": jnp.zeros((65536,), jnp.float32),
+        "emb_q": jnp.asarray(
+            np.round(rng.normal(0, 0.02, 100_000), 4), jnp.float32
+        ),
+    }
+    stats = save_tree(tree, tmp_path / "ck")
+    assert stats["ratio"] < 0.35, stats
+
+
+def test_atomic_no_partial_state(tmp_path):
+    tree = mk_tree()
+    save_tree(tree, tmp_path / "ck")
+    # a crashed second save leaves a .tmp dir; the committed dir still loads
+    tmp = tmp_path / "ck.tmp"
+    tmp.mkdir()
+    (tmp / "garbage").write_text("crash")
+    got, _ = restore_tree(tmp_path / "ck")
+    assert len(jax.tree.leaves(got)) == len(jax.tree.leaves(tree))
+
+
+def test_manager_retention_and_resume(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in [10, 20, 30]:
+        mgr.save(s, mk_tree(s), extra={"data_step": s * 2})
+    assert mgr.latest_step() == 30
+    got, extra = mgr.restore_latest()
+    assert extra["step"] == 30 and extra["data_step"] == 60
+    # retention: only 2 kept
+    kept = sorted(p.name for p in Path(tmp_path).glob("step_*"))
+    assert len(kept) == 2
+
+
+def test_elastic_restore_different_sharding(tmp_path):
+    """Checkpoints are mesh-independent: save 'sharded' state (here: the
+    logical arrays), restore, and re-shard onto a different layout."""
+    tree = {"w": jnp.arange(64 * 8, dtype=jnp.float32).reshape(64, 8)}
+    save_tree(tree, tmp_path / "ck")
+    got, _ = restore_tree(tmp_path / "ck")
+    # simulate resharding 1-device -> 4-way logical split
+    w = np.asarray(got["w"])
+    shards = np.split(w, 4, axis=0)
+    re = np.concatenate(shards, axis=0)
+    assert np.array_equal(re, w)
+
+
+def test_data_pipeline_o1_resume():
+    ts = TokenStream(vocab=1000, batch=4, seq=16, seed=3)
+    b5 = ts.batch_at(5)
+    it = ts.batches(start_step=5)
+    s, b = next(it)
+    assert s == 5
+    assert np.array_equal(np.asarray(b5["tokens"]), np.asarray(b["tokens"]))
+
+
+def test_shard_store_roundtrip_and_random_access(tmp_path):
+    from repro.data import gas_turbine_emissions
+
+    store = ShardStore(tmp_path)
+    x = gas_turbine_emissions(70000).reshape(7, 10000)
+    m = store.write("turbine", x, chunk=16384)
+    back = store.read("turbine")
+    assert np.array_equal(back.view(np.uint64), x.view(np.uint64))
+    c1 = store.read_chunk("turbine", 1)
+    assert np.array_equal(
+        c1, x.reshape(-1)[16384 : 2 * 16384]
+    )
+    assert store.ratio("turbine") < 1.0

@@ -1,0 +1,186 @@
+"""GD / GreedyGD / bitplane / metrics tests, incl. the paper's headline claim:
+preprocessing improves CR (δ_CR < 0) on both dataset families (Fig. 6)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.compression import (
+    bitplanes_to_words, compressed_size_bytes, delta_cr, evaluate,
+    gd_compress, gd_decompress, gd_get, pack_uint_stream, shared_bit_mask,
+    shared_bits_report, unpack_uint_stream, words_to_bitplanes,
+)
+from repro.compression.greedy_gd import greedy_gd_compress, greedy_gd_select
+from repro.core import pipeline
+from repro.data import chicago_taxi_fares, gas_turbine_emissions
+
+
+@pytest.fixture(scope="module")
+def taxi():
+    return chicago_taxi_fares(1000)
+
+
+@pytest.fixture(scope="module")
+def turbine():
+    return gas_turbine_emissions(1000)
+
+
+# ---------------------------------------------------------------------------
+# bitplanes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [np.uint64, np.uint32, np.uint16])
+def test_bitplane_roundtrip(dtype):
+    rng = np.random.default_rng(0)
+    w = rng.integers(0, np.iinfo(dtype).max, 257, dtype=dtype)
+    planes = words_to_bitplanes(w)
+    assert planes.shape == (dtype().itemsize * 8, 257)
+    back = bitplanes_to_words(planes, dtype().itemsize * 8)
+    assert np.array_equal(back, w)
+
+
+def test_shared_bit_mask():
+    w = np.asarray([0b1100, 0b1101, 0b1110], np.uint64)
+    m = int(shared_bit_mask(w))
+    # bits 2,3 shared (11), bits 0,1 differ; all high bits shared (zeros)
+    assert m & 0b1111 == 0b1100
+    assert (m >> 4) == (1 << 60) - 1
+
+
+def test_shared_bits_report(taxi):
+    rep = shared_bits_report(taxi)
+    assert 0 <= rep["S_M"] <= 52 and 0 <= rep["S_E"] <= 11
+    assert rep["S_TOT"] == rep["S_M"] + rep["S_E"] + rep["S_sign"]
+
+
+@given(st.integers(1, 63), st.integers(1, 100))
+@settings(max_examples=50, deadline=None)
+def test_pack_uint_stream_roundtrip(width, n):
+    rng = np.random.default_rng(width * n)
+    vals = rng.integers(0, 1 << width, n, dtype=np.uint64)
+    buf = pack_uint_stream(vals, width)
+    assert len(buf) == -(-n * width // 8)
+    back = unpack_uint_stream(buf, width, n)
+    assert np.array_equal(back, vals)
+
+
+# ---------------------------------------------------------------------------
+# GD
+# ---------------------------------------------------------------------------
+
+def test_gd_roundtrip(taxi):
+    c = gd_compress(taxi)
+    back = gd_decompress(c).view(np.float64)
+    assert np.array_equal(back, taxi)
+
+
+def test_gd_random_access(taxi):
+    c = gd_compress(taxi)
+    words = taxi.view(np.uint64)
+    for i in [0, 1, 500, 999]:
+        assert gd_get(c, i) == int(words[i])
+
+
+def test_gd_custom_mask_roundtrip(turbine):
+    mask = ((1 << 20) - 1) << 44  # exponent + top mantissa
+    c = gd_compress(turbine, mask)
+    assert np.array_equal(gd_decompress(c).view(np.float64), turbine)
+
+
+def test_greedy_gd_beats_default_split(taxi):
+    g = greedy_gd_compress(taxi)
+    d = gd_compress(taxi)
+    assert np.array_equal(gd_decompress(g).view(np.float64), taxi)
+    assert g.size_bits() <= d.size_bits()
+
+
+def test_greedy_seed_includes_shared_bits(taxi):
+    mask = greedy_gd_select(taxi)
+    shared = int(shared_bit_mask(taxi))
+    assert mask & shared == shared
+
+
+# ---------------------------------------------------------------------------
+# the paper's headline: preprocessing improves CR on both dataset families
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make", [chicago_taxi_fares, gas_turbine_emissions])
+@pytest.mark.parametrize("compressor", ["greedy_gd", "zlib", "zstd"])
+def test_delta_cr_not_worse(make, compressor):
+    """Auto-selection scored by the target compressor can never lose to
+    no-prep by more than the 16-byte header (identity is a candidate)."""
+    from repro.compression.metrics import size_fn_for
+
+    x = make(1000)
+    enc = pipeline.encode(x, size_fn=size_fn_for(compressor))
+    rep = evaluate(x, enc, compressor)
+    assert rep.cr_prep < 1.0
+    assert rep.cr_prep <= rep.cr_noprep + 16 / x.nbytes, rep.row()
+
+
+@pytest.mark.parametrize(
+    "make,bound",
+    [(chicago_taxi_fares, -0.10), (gas_turbine_emissions, -0.05)],
+)
+def test_delta_cr_negative_gd(make, bound):
+    """Paper Fig. 6 / abstract: under the GD-family compressor the best
+    transform improves CR substantially (paper: up to -40%)."""
+    from repro.compression.metrics import size_fn_for
+
+    x = make(1000)
+    enc = pipeline.encode(x, size_fn=size_fn_for("greedy_gd"))
+    rep = evaluate(x, enc, "greedy_gd")
+    assert enc.method != "identity", rep.row()
+    assert rep.delta_cr < bound, rep.row()
+    # and the decoded stream is bitwise identical
+    assert np.array_equal(
+        pipeline.decode(enc).view(np.uint64), x.view(np.uint64)
+    )
+
+
+def test_shared_bits_increase(taxi):
+    enc = pipeline.encode(taxi, method="shift_save_even", params={"D": 16})
+    before = shared_bits_report(taxi)
+    after = shared_bits_report(enc.data)
+    assert after["S_TOT"] > before["S_TOT"]
+    assert after["D_M_leading"] >= 16
+
+
+def test_compressors_sanity(taxi):
+    raw = compressed_size_bytes(taxi, "raw")
+    for m in ["zlib", "zstd", "gd", "greedy_gd", "zlib_bitplanes",
+              "xor_zlib", "xor_greedy_gd"]:
+        assert 0 < compressed_size_bytes(taxi, m) < 2 * raw
+
+
+def _smooth_stream(n=4000):
+    """Genuinely smooth (unquantized) signal — the Gorilla use case."""
+    t = np.linspace(0, 4, n)
+    return (20.0 + np.sin(t) + 1e-5 * t).astype(np.float64)
+
+
+def test_xor_delta_roundtrip(turbine):
+    from repro.compression.xor_delta import xor_delta, xor_undelta, xor_undelta_fast
+
+    for x in (turbine, _smooth_stream()):
+        w = x.view(np.uint64)
+        d = xor_delta(w)
+        assert np.array_equal(xor_undelta(d), w)
+        assert np.array_equal(xor_undelta_fast(d), w)
+    # smooth stream: XOR-delta zeroes the high planes (sign/exp/top mantissa)
+    from repro.compression.bitplane import words_to_bitplanes
+
+    d = xor_delta(_smooth_stream().view(np.uint64))
+    planes = words_to_bitplanes(d[1:])
+    zero_planes = sum(1 for p in range(64) if not planes[p].any())
+    assert zero_planes >= 8
+
+
+def test_xor_delta_helps_smooth_data():
+    x = _smooth_stream()
+    z = compressed_size_bytes(x, "zlib")
+    zx = compressed_size_bytes(x, "xor_zlib")
+    assert zx < z  # Gorilla effect on a smooth stream
+    # NOTE: on the 4-decimal-quantized turbine stream XOR-delta HURTS zlib
+    # (destroys repeated byte patterns) — measured and recorded in
+    # EXPERIMENTS.md; that is why the codec treats it as a scored candidate
+    # stage, never an unconditional pre-pass.

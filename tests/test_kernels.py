@@ -1,0 +1,162 @@
+"""Pallas kernel validation (interpret mode on CPU) against pure-jnp oracles,
+with shape/dtype sweeps per the deliverable."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.bitplane_transpose.kernel import G_BLK, _butterfly32, bitplane_transpose_blocks
+from repro.kernels.bitplane_transpose.ops import from_bitplanes, to_bitplanes, transpose_groups
+from repro.kernels.bitplane_transpose.ref import bitplane_transpose_ref
+from repro.kernels.mshift.ops import mshift
+from repro.kernels.mshift.ref import L32, mshift_ref
+from repro.kernels.sharedbits.ops import shared_mask_floats, shared_mask_u32, shared_mask_u64
+from repro.kernels.sharedbits.ref import shared_mask_ref
+
+RNG = np.random.default_rng(7)
+
+
+# ---------------------------------------------------------------------------
+# bitplane transpose
+# ---------------------------------------------------------------------------
+
+def test_butterfly_matches_ref_small():
+    w = jnp.asarray(RNG.integers(0, 2**32, (4, 32), dtype=np.uint32))
+    assert jnp.all(_butterfly32(w) == bitplane_transpose_ref(w))
+
+
+@pytest.mark.parametrize("g", [G_BLK, 2 * G_BLK])
+def test_pallas_transpose_matches_ref(g):
+    w = jnp.asarray(RNG.integers(0, 2**32, (g, 32), dtype=np.uint32))
+    out = bitplane_transpose_blocks(w, interpret=True)
+    # oracle on a subsample (ref is O(1024) ops per group)
+    idx = np.linspace(0, g - 1, 8, dtype=int)
+    assert jnp.all(out[idx] == bitplane_transpose_ref(w[idx]))
+
+
+def test_transpose_self_inverse():
+    w = jnp.asarray(RNG.integers(0, 2**32, (300, 32), dtype=np.uint32))
+    assert jnp.all(transpose_groups(transpose_groups(w)) == w)
+
+
+@pytest.mark.parametrize("n", [32, 320, 32 * 257])
+def test_to_from_bitplanes_roundtrip(n):
+    w = jnp.asarray(RNG.integers(0, 2**32, n, dtype=np.uint32))
+    planes = to_bitplanes(w)
+    assert planes.shape == (32, n // 32)
+    assert jnp.all(from_bitplanes(planes) == w)
+
+
+def test_bitplanes_shared_bits_become_constant_planes():
+    """Transformed data with D shared top bits -> D constant plane rows (the
+    property the compressor exploits)."""
+    base = np.uint32(0xABC00000)
+    w = jnp.asarray(base | RNG.integers(0, 1 << 20, 64 * 32, dtype=np.uint32))
+    planes = to_bitplanes(w)
+    const_rows = sum(
+        1 for q in range(32)
+        if int(jnp.min(planes[q])) == int(jnp.max(planes[q]))
+        and int(planes[q][0]) in (0, 0xFFFFFFFF)
+    )
+    assert const_rows >= 12  # top 12 bits are shared
+
+
+# ---------------------------------------------------------------------------
+# mshift (fused multiply&shift)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d,span_bits", [(2, 20), (4, 18), (6, 16), (8, 13)])
+def test_mshift_matches_ref(d, span_bits):
+    n = 3000
+    lo = 1 << L32
+    x = jnp.asarray(
+        RNG.integers(lo + (1 << 20), lo + (1 << 20) + (1 << span_bits), n),
+        jnp.int32,
+    )
+    a1 = int(max((1 << (L32 + 1)) - 2 - int(x.max()), 0))
+    got_x, got_off = mshift(x, d, max_iter=64)
+    ref_x, ref_off = mshift_ref(x, a1, d, max_iter=64)
+    assert jnp.all(got_x == ref_x)
+    assert jnp.all(got_off == ref_off)
+    assert int(got_off.min()) >= 1  # converged everywhere
+
+
+def test_mshift_matches_host_transform():
+    """Kernel must agree with the authoritative host transform (F32 spec)."""
+    from repro.core import transforms as T
+    from repro.core.float_bits import F32
+
+    n = 500
+    lo = 1 << L32
+    x = np.sort(RNG.integers(lo, lo + (1 << 18), n))
+    got_x, got_off = mshift(jnp.asarray(x, jnp.int32), 4, max_iter=64)
+    Xt, off, meta = T.multiply_shift_forward(
+        jnp.asarray(x, jnp.int64), 4, max_iter=64, spec=F32
+    )
+    assert np.array_equal(np.asarray(got_x, np.int64), np.asarray(Xt))
+    assert np.array_equal(np.asarray(got_off), np.asarray(off))
+
+
+def test_mshift_flags_nonconverged():
+    x = jnp.asarray(
+        RNG.integers(1 << L32, 1 << (L32 + 1), 2000), jnp.int32
+    )  # full binade
+    _, off = mshift(x, 10, max_iter=4)
+    assert int((off == -1).sum()) > 0
+
+
+@given(st.integers(1, 10), st.integers(1, 400))
+@settings(max_examples=30, deadline=None)
+def test_mshift_hypothesis_roundtrippable(d, n):
+    """Every converged element must be invertible via the schedule."""
+    rng = np.random.default_rng(d * 997 + n)
+    lo = 1 << L32
+    x = jnp.asarray(rng.integers(lo, lo + (1 << 12), n), jnp.int32)
+    got_x, off = mshift(x, d, max_iter=64)
+    assert int((off == -1).sum()) == 0
+    a1 = int(max((1 << (L32 + 1)) - 2 - int(x.max()), 0))
+    a_const = (1 << (L32 - d)) - 2
+    cur = np.asarray(got_x, np.int64)
+    offs = np.asarray(off).copy()
+    for k in range(int(off.max()), 0, -1):
+        sel = offs == k
+        cur[sel] -= a1 if k == 1 else a_const
+        offs[sel] -= 1
+    assert np.array_equal(cur, np.asarray(x, np.int64))
+
+
+# ---------------------------------------------------------------------------
+# sharedbits
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 100, 512 * 128, 512 * 128 + 13])
+def test_shared_mask_u32_matches_ref(n):
+    w = jnp.asarray(
+        np.uint32(0xDEAD0000) | RNG.integers(0, 1 << 14, n, dtype=np.uint32)
+    )
+    assert int(shared_mask_u32(w)) == int(shared_mask_ref(w))
+
+
+def test_shared_mask_u64():
+    w = jnp.asarray(
+        np.uint64(0xABCDEF0000000000) | RNG.integers(0, 1 << 30, 1000, dtype=np.uint64)
+    )
+    got = int(shared_mask_u64(w))
+    a = np.bitwise_and.reduce(np.asarray(w))
+    o = np.bitwise_or.reduce(np.asarray(w))
+    assert got == int(~(a ^ o))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_shared_mask_floats_matches_numpy(dtype):
+    from repro.compression.bitplane import shared_bit_mask
+
+    x = jnp.asarray(1.5 + RNG.random(777) * 0.001, dtype)
+    got = int(shared_mask_floats(x))
+    want = int(shared_bit_mask(np.asarray(x)))
+    assert got == want
+
+
+def test_shared_mask_constant_stream():
+    w = jnp.full(5000, 0x12345678, jnp.uint32)
+    assert int(shared_mask_u32(w)) == 0xFFFFFFFF
