@@ -1,8 +1,15 @@
 """Codec-path benchmarks: transform throughput, GD/zlib/zstd sizing,
-checkpoint save/restore, kernel micro-timings (interpret-mode noted)."""
+checkpoint save/restore, kernel micro-timings (interpret-mode noted).
+
+Emits ``BENCH_codec.json`` (name -> {us, mbps, derived}) so the perf
+trajectory is machine-readable across PRs; the CSV printed by
+``benchmarks.run`` is unchanged.
+"""
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -11,8 +18,16 @@ import numpy as np
 from repro.compression.gd import gd_compress, gd_decompress
 from repro.compression.greedy_gd import greedy_gd_compress
 from repro.core import pipeline, transforms as T
+from repro.core.float_bits import normalize_to_binade
 from repro.core.lossless import significand_int
 from repro.data import gas_turbine_emissions
+
+# anchored to the repo root so the tracked baseline updates regardless of cwd;
+# smoke runs write a separate file so the 100k baseline is never clobbered
+BENCH_JSON = Path(__file__).resolve().parent.parent / "BENCH_codec.json"
+BENCH_JSON_SMOKE = BENCH_JSON.with_suffix(".smoke.json")
+
+_records: dict[str, dict] = {}
 
 
 def _timeit(fn, n=3):
@@ -23,37 +38,61 @@ def _timeit(fn, n=3):
     return (time.time() - t0) / n * 1e6  # us
 
 
-def bench_transforms(rows: list):
-    x = gas_turbine_emissions(100_000)
-    y, e, s = __import__("repro.core.float_bits", fromlist=["x"]).normalize_to_binade(
-        jnp.asarray(x)
-    )
+def _record(rows, name, us, derived="", nbytes=None):
+    mbps = nbytes / (us / 1e6) / 1e6 if nbytes else None
+    _records[name] = {
+        "us": round(us, 1),
+        "mbps": round(mbps, 1) if mbps else None,
+        "derived": derived,
+    }
+    rows.append((name, us, derived))
+
+
+def bench_transforms(rows: list, n_elems: int = 100_000):
+    tag = f"{n_elems // 1000}k"
+    x = gas_turbine_emissions(n_elems)
+    y, e, s = normalize_to_binade(jnp.asarray(x))
     X = significand_int(y)
     for name, fn in [
         ("compact_bins", lambda: T.compact_bins_forward(X, 16)),
         ("multiply_shift", lambda: T.multiply_shift_forward(X, 2, max_iter=64)),
+        ("shift_separate", lambda: T.shift_separate_forward(X, 2)),
         ("shift_save_even", lambda: T.shift_save_even_forward(X, 16)),
     ]:
         us = _timeit(fn)
-        mbps = x.nbytes / (us / 1e6) / 1e6
-        rows.append((f"transform_{name}_100k", us, f"{mbps:.0f} MB/s fwd"))
+        _record(rows, f"transform_{name}_{tag}", us,
+                f"{x.nbytes / (us / 1e6) / 1e6:.0f} MB/s fwd", x.nbytes)
 
-    enc = pipeline.encode(x[:10_000])
-    us = _timeit(lambda: pipeline.encode(x[:10_000]))
-    rows.append(("pipeline_encode_auto_10k", us, f"picked={enc.method}"))
+    # the headline: full auto-candidate selection at scale (two-phase engine)
+    enc = pipeline.encode(x)
+    us = _timeit(lambda: pipeline.encode(x))
+    _record(rows, f"pipeline_encode_auto_{tag}", us,
+            f"picked={enc.method}", x.nbytes)
     us = _timeit(lambda: pipeline.decode(enc))
-    rows.append(("pipeline_decode_10k", us, "bitwise-lossless"))
+    _record(rows, f"pipeline_decode_{tag}", us, "bitwise-lossless", x.nbytes)
+
+    if n_elems <= 10_000:
+        return
+    x10 = x[:10_000]
+    enc10 = pipeline.encode(x10)
+    us = _timeit(lambda: pipeline.encode(x10))
+    _record(rows, "pipeline_encode_auto_10k", us,
+            f"picked={enc10.method}", x10.nbytes)
+    us = _timeit(lambda: pipeline.decode(enc10))
+    _record(rows, "pipeline_decode_10k", us, "bitwise-lossless", x10.nbytes)
 
 
 def bench_gd(rows: list):
     x = gas_turbine_emissions(10_000)
     us = _timeit(lambda: gd_compress(x))
-    rows.append(("gd_compress_10k", us, f"bits={gd_compress(x).size_bits()}"))
+    _record(rows, "gd_compress_10k", us,
+            f"bits={gd_compress(x).size_bits()}", x.nbytes)
     c = greedy_gd_compress(x)
     us = _timeit(lambda: greedy_gd_compress(x), n=1)
-    rows.append(("greedy_gd_select+compress_10k", us, f"bits={c.size_bits()}"))
+    _record(rows, "greedy_gd_select+compress_10k", us,
+            f"bits={c.size_bits()}", x.nbytes)
     us = _timeit(lambda: gd_decompress(c))
-    rows.append(("gd_decompress_10k", us, ""))
+    _record(rows, "gd_decompress_10k", us, "", x.nbytes)
 
 
 def bench_kernels(rows: list):
@@ -66,15 +105,15 @@ def bench_kernels(rows: list):
     rng = np.random.default_rng(0)
     w = jnp.asarray(rng.integers(0, 2**32, 256 * 32, dtype=np.uint32))
     us = _timeit(lambda: jax.block_until_ready(to_bitplanes(w)))
-    rows.append(("pallas_bitplane_transpose_8k(interp)", us, "vs ref in tests"))
+    _record(rows, "pallas_bitplane_transpose_8k(interp)", us, "vs ref in tests")
 
     x = jnp.asarray(rng.integers(1 << 23, (1 << 23) + (1 << 12), 128 * 128),
                     jnp.int32)
     us = _timeit(lambda: jax.block_until_ready(mshift(x, 4, 16)))
-    rows.append(("pallas_mshift_16k(interp)", us, "fused iterations"))
+    _record(rows, "pallas_mshift_16k(interp)", us, "fused iterations")
 
     us = _timeit(lambda: jax.block_until_ready(shared_mask_u32(w)))
-    rows.append(("pallas_sharedbits_8k(interp)", us, ""))
+    _record(rows, "pallas_sharedbits_8k(interp)", us, "")
 
 
 def bench_checkpoint(rows: list):
@@ -91,12 +130,12 @@ def bench_checkpoint(rows: list):
         t0 = time.time()
         stats = save_tree(params, f"{d}/ck")
         us = (time.time() - t0) * 1e6
-        rows.append(("checkpoint_save_reduced_model", us,
-                     f"ratio={stats['ratio']:.3f}"))
+        _record(rows, "checkpoint_save_reduced_model", us,
+                f"ratio={stats['ratio']:.3f}")
         t0 = time.time()
         restore_tree(f"{d}/ck")
-        rows.append(("checkpoint_restore_reduced_model",
-                     (time.time() - t0) * 1e6, "bitwise"))
+        _record(rows, "checkpoint_restore_reduced_model",
+                (time.time() - t0) * 1e6, "bitwise")
 
 
 def bench_grad_compress(rows: list):
@@ -107,13 +146,27 @@ def bench_grad_compress(rows: list):
     g = (rng.standard_normal(1 << 18) * 1e-3).astype(np.float32)
     t0 = time.time()
     rep = bucket_report(g)
-    rows.append(("grad_bucket_compress_256k", (time.time() - t0) * 1e6,
-                 f"ratio={rep['ratio']:.3f} method={rep['method']}"))
+    _record(rows, "grad_bucket_compress_256k", (time.time() - t0) * 1e6,
+            f"ratio={rep['ratio']:.3f} method={rep['method']}", g.nbytes)
 
 
-def run(rows: list):
-    bench_transforms(rows)
-    bench_gd(rows)
-    bench_kernels(rows)
-    bench_checkpoint(rows)
-    bench_grad_compress(rows)
+def _dump_json(smoke: bool):
+    path = BENCH_JSON_SMOKE if smoke else BENCH_JSON
+    path.write_text(json.dumps(_records, indent=2, sort_keys=True))
+
+
+def run(rows: list, smoke: bool = False):
+    """smoke=True: 10k-element CI-sized pass over the codec path only
+    (skips model checkpoint / gradient-bucket benches); results go to
+    BENCH_codec.smoke.json so the tracked 100k baseline stays intact."""
+    if smoke:
+        bench_transforms(rows, n_elems=10_000)
+        bench_gd(rows)
+        bench_kernels(rows)
+    else:
+        bench_transforms(rows)
+        bench_gd(rows)
+        bench_kernels(rows)
+        bench_checkpoint(rows)
+        bench_grad_compress(rows)
+    _dump_json(smoke)

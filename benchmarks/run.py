@@ -1,7 +1,7 @@
 """Benchmark harness entry point — one module per paper table/figure plus
 framework-path benches.  Prints ``name,us_per_call,derived`` CSV.
 
-  PYTHONPATH=src python -m benchmarks.run [--only paper|codec|roofline]
+  PYTHONPATH=src python -m benchmarks.run [--only paper|codec|roofline] [--smoke]
 """
 import argparse
 import sys
@@ -11,6 +11,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, choices=[None, "paper", "codec",
                                                      "roofline"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized codec pass (10k elements, no model benches)")
     args = ap.parse_args()
     rows = []
     if args.only in (None, "paper"):
@@ -18,7 +20,7 @@ def main() -> None:
         bench_paper.run(rows)
     if args.only in (None, "codec"):
         from benchmarks import bench_codec
-        bench_codec.run(rows)
+        bench_codec.run(rows, smoke=args.smoke)
     if args.only in (None, "roofline"):
         from benchmarks import roofline
         roofline.run(rows)

@@ -8,16 +8,25 @@ bytes — exactly what the paper's transforms maximize (§1.1, [11]).
 """
 from __future__ import annotations
 
+import functools as _functools
+
 import numpy as np
 
 from ..core.float_bits import FloatSpec, F64
+
+try:  # jax ships ml_dtypes; bfloat16 registers as a custom ('V'-kind) dtype
+    import ml_dtypes as _ml_dtypes
+
+    _BFLOAT16 = np.dtype(_ml_dtypes.bfloat16)
+except ImportError:  # pragma: no cover
+    _BFLOAT16 = None
 
 
 def _as_words(x) -> np.ndarray:
     x = np.asarray(x)
     if x.dtype.kind == "f":
         x = x.view({8: np.uint64, 4: np.uint32, 2: np.uint16}[x.dtype.itemsize])
-    elif x.dtype == np.dtype("bfloat16") if hasattr(np, "bfloat16") else False:
+    elif _BFLOAT16 is not None and x.dtype == _BFLOAT16:
         x = x.view(np.uint16)
     return x.reshape(-1)
 
@@ -96,18 +105,25 @@ def compress_int_stream(vals: np.ndarray) -> bytes:
     if v.size == 0:
         return b"\x00"
     lo = int(v.min())
-    dense = v - lo
+    hi = int(v.max())
+    # offsets computed in uint64 two's-complement space: exact for any int64
+    # span (v - lo in int64 wraps when the span exceeds 2^63)
+    dense = v.view(np.uint64) - np.uint64(lo % (1 << 64))
     width_d = max(1, int(dense.max()).bit_length())
     cand_d = b"\x01" + np.int64(lo).tobytes() + np.int8(width_d).tobytes() + zlib.compress(
         pack_uint_stream(dense.astype(np.uint64), width_d), 6
     )
-    d = np.diff(v, prepend=np.int64(0))
-    zz = ((d << 1) ^ (d >> 63)).astype(np.uint64)
-    width_z = max(1, int(zz.max()).bit_length())
-    cand_z = b"\x02" + np.int8(width_z).tobytes() + zlib.compress(
-        pack_uint_stream(zz, width_z), 6
-    )
-    return min([cand_d, cand_z], key=len)
+    # zigzag-delta candidate only when every delta (incl. the implicit
+    # first-vs-0 one) fits int64 zigzag: |d| < 2^62 avoids shift overflow
+    if max(abs(lo), abs(hi), hi - lo) < (1 << 62):
+        d = np.diff(v, prepend=np.int64(0))
+        zz = ((d << 1) ^ (d >> 63)).astype(np.uint64)
+        width_z = max(1, int(zz.max()).bit_length())
+        cand_z = b"\x02" + np.int8(width_z).tobytes() + zlib.compress(
+            pack_uint_stream(zz, width_z), 6
+        )
+        return min([cand_d, cand_z], key=len)
+    return cand_d
 
 
 def decompress_int_stream(buf: bytes, n: int) -> np.ndarray:
@@ -120,30 +136,84 @@ def decompress_int_stream(buf: bytes, n: int) -> np.ndarray:
         lo = np.frombuffer(buf[1:9], np.int64)[0]
         width = np.frombuffer(buf[9:10], np.int8)[0]
         dense = unpack_uint_stream(zlib.decompress(buf[10:]), int(width), n)
-        return dense.astype(np.int64) + lo
+        # wrap-exact inverse of the uint64 offset encoding
+        return (dense + np.uint64(int(lo) % (1 << 64))).view(np.int64)
     width = np.frombuffer(buf[1:2], np.int8)[0]
     zz = unpack_uint_stream(zlib.decompress(buf[2:]), int(width), n).astype(np.int64)
     d = (zz >> 1) ^ -(zz & 1)
     return np.cumsum(d).astype(np.int64)
 
 
+@_functools.lru_cache(maxsize=None)
+def _pack_overlaps(width: int):
+    """(j, k, d) triples for 64-value blocks: value j's bits intersect packed
+    64-bit word k of the block, with out_significance = val_significance + d.
+
+    Value j occupies stream bits [j*width, (j+1)*width) (MSB first); word k
+    covers stream bits [64k, 64k+64) with stream bit 64k at its MSB.  The
+    affine map gives d = 64*(k+1) - width*(j+1), always in (-64, 64).
+    """
+    out = []
+    for j in range(64):
+        k0 = (j * width) // 64
+        k1 = ((j + 1) * width - 1) // 64
+        for k in range(k0, k1 + 1):
+            out.append((j, k, 64 * (k + 1) - width * (j + 1)))
+    return out
+
+
 def pack_uint_stream(vals: np.ndarray, bit_width: int) -> bytes:
-    """Pack non-negative ints into a dense bit_width-bits-each stream."""
+    """Pack non-negative ints into a dense bit_width-bits-each stream.
+
+    Word-parallel: blocks of 64 values map onto `bit_width` packed uint64
+    words with a single shift/OR per (value-lane, word) overlap — O(64 +
+    bit_width) vectorized passes, no (n, bit_width) uint8 intermediate.
+    """
     vals = np.asarray(vals, np.uint64)
-    if bit_width == 0 or vals.size == 0:
+    w = int(bit_width)
+    if w == 0 or vals.size == 0:
         return b""
-    bits = np.zeros((vals.size, bit_width), np.uint8)
-    for b in range(bit_width):
-        bits[:, b] = (vals >> np.uint64(bit_width - 1 - b)) & np.uint64(1)
-    return np.packbits(bits.reshape(-1)).tobytes()
+    if not (1 <= w <= 64):
+        raise ValueError(f"bit_width must be in [0, 64], got {w}")
+    n = vals.size
+    nbytes = -(-n * w // 8)
+    nblk = -(-n // 64)
+    v = np.zeros((nblk * 64,), np.uint64)
+    v[:n] = vals
+    if w < 64:
+        v &= np.uint64((1 << w) - 1)
+    v = v.reshape(nblk, 64)
+    out = np.zeros((nblk, w), np.uint64)
+    for j, k, d in _pack_overlaps(w):
+        if d >= 0:
+            out[:, k] |= v[:, j] << np.uint64(d)
+        else:
+            out[:, k] |= v[:, j] >> np.uint64(-d)
+    return out.astype(">u8").tobytes()[:nbytes]
 
 
 def unpack_uint_stream(buf: bytes, bit_width: int, n: int) -> np.ndarray:
-    if bit_width == 0 or n == 0:
+    """Inverse of :func:`pack_uint_stream` (word-parallel, same layout)."""
+    w = int(bit_width)
+    if w == 0 or n == 0:
         return np.zeros(n, np.uint64)
-    bits = np.unpackbits(np.frombuffer(buf, np.uint8))[: n * bit_width]
-    bits = bits.reshape(n, bit_width).astype(np.uint64)
-    out = np.zeros(n, np.uint64)
-    for b in range(bit_width):
-        out |= bits[:, b] << np.uint64(bit_width - 1 - b)
-    return out
+    if not (1 <= w <= 64):
+        raise ValueError(f"bit_width must be in [0, 64], got {w}")
+    nbytes = -(-n * w // 8)
+    nblk = -(-n // 64)
+    raw = np.frombuffer(buf, np.uint8)
+    if raw.size < nbytes:
+        raise ValueError(
+            f"buffer too short: {raw.size} bytes < {nbytes} needed for "
+            f"{n} x {w}-bit values"
+        )
+    padded = np.zeros(nblk * w * 8, np.uint8)
+    padded[:nbytes] = raw[:nbytes]
+    words = padded.view(">u8").astype(np.uint64).reshape(nblk, w)
+    v = np.zeros((nblk, 64), np.uint64)
+    for j, k, d in _pack_overlaps(w):
+        lo = max(d, 0)
+        hi = min(63, d + w - 1)
+        seg = (words[:, k] >> np.uint64(lo)) & np.uint64((1 << (hi - lo + 1)) - 1)
+        v[:, j] |= seg << np.uint64(lo - d)
+    return v.reshape(-1)[:n]

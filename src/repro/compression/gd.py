@@ -13,6 +13,7 @@ compressed data [6].
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 
 import numpy as np
@@ -20,15 +21,35 @@ import numpy as np
 from .bitplane import _as_words, pack_uint_stream, unpack_uint_stream
 
 
+@functools.lru_cache(maxsize=65536)
+def _mask_runs(mask: int) -> tuple:
+    """Decompose a 64-bit mask into (start, length, dense_pos) runs of
+    contiguous set bits.  Typical GD masks (MSB prefix ∪ shared bits) have a
+    handful of runs, so extract/deposit cost O(runs) vectorized passes
+    instead of one pass per bit position."""
+    runs = []
+    pos = 0
+    b = 0
+    mask &= (1 << 64) - 1
+    while b < 64:
+        if (mask >> b) & 1:
+            start = b
+            while b < 64 and (mask >> b) & 1:
+                b += 1
+            runs.append((start, b - start, pos))
+            pos += b - start
+        else:
+            b += 1
+    return tuple(runs)
+
+
 def _extract_bits(words: np.ndarray, mask: int) -> np.ndarray:
     """Gather the masked bits of each word into a dense low-bits integer."""
     w = words.astype(np.uint64)
     out = np.zeros_like(w)
-    pos = np.uint64(0)
-    for b in range(64):
-        if (mask >> b) & 1:
-            out |= ((w >> np.uint64(b)) & np.uint64(1)) << pos
-            pos += np.uint64(1)
+    for start, length, pos in _mask_runs(int(mask)):
+        seg = (w >> np.uint64(start)) & np.uint64((1 << length) - 1)
+        out |= seg << np.uint64(pos)
     return out
 
 
@@ -36,11 +57,9 @@ def _deposit_bits(vals: np.ndarray, mask: int) -> np.ndarray:
     """Inverse of :func:`_extract_bits`."""
     v = vals.astype(np.uint64)
     out = np.zeros_like(v)
-    pos = np.uint64(0)
-    for b in range(64):
-        if (mask >> b) & 1:
-            out |= ((v >> pos) & np.uint64(1)) << np.uint64(b)
-            pos += np.uint64(1)
+    for start, length, pos in _mask_runs(int(mask)):
+        seg = (v >> np.uint64(pos)) & np.uint64((1 << length) - 1)
+        out |= seg << np.uint64(start)
     return out
 
 

@@ -7,11 +7,26 @@ non-finite values (kept verbatim, excluded from the transform).  The
 transform then operates on same-binade significands.
 
 ``encode(x, method=...)`` -> :class:`Encoded`;  ``decode(enc)`` -> x, bitwise.
-``method="auto"`` tries a grid of (transform, parameter) candidates, verifies
-each round-trip (production safety — a failed candidate is *rejected*, never
-shipped), scores by actual compressed size (zlib by default; a GD scorer can
-be passed) and keeps the winner.  This implements the paper's Fig. 6
-"best of the four techniques" selection as a first-class feature.
+``method="auto"`` implements the paper's Fig. 6 "best of the four techniques"
+selection as a two-phase engine:
+
+* **Phase 1 — sample-select.**  Candidates run their forward transform on a
+  strided sample and are scored by the fused analytic estimator
+  (:mod:`repro.core.scoring`: shared-bit mask + per-bitplane transition /
+  entropy counts in one jitted pass).  All estimates stay on device and are
+  fetched with a single round-trip.  Only the top finalists (plus the
+  identity no-prep baseline) are re-scored with the real compressor (zlib by
+  default; any ``size_fn`` can be passed).
+* **Phase 2 — chunked apply + verify.**  The winner is applied to the full
+  array and round-trip verified chunk by chunk, with the verification
+  verdicts reduced on device and fetched together with the transformed
+  values — one round-trip.  A candidate that fails verification is
+  *rejected, never shipped*; the engine falls back to the next finalist and
+  ultimately to identity (which always round-trips).
+
+When a custom ``size_fn`` is supplied, selection scores every candidate with
+it exactly (the seed semantics, used by the compressor-matched metric tests);
+the vectorized transform kernels keep that path fast too.
 """
 from __future__ import annotations
 
@@ -19,9 +34,11 @@ import dataclasses
 import zlib
 from typing import Callable
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import scoring as S
 from . import transforms as T
 from .float_bits import (
     BF16,
@@ -57,6 +74,18 @@ DEFAULT_CANDIDATES = (
     ("shift_save_even", {"D": 48}),
 )
 
+# phase-1 sample size (strided); full data below this is scored directly.
+# 4096 keeps winner agreement with full-zlib scoring at 95% on the test
+# corpus (tests/test_scoring.py) while halving phase-1 device compute.
+DEFAULT_SAMPLE_ELEMS = 4096
+# finalists re-scored with the real compressor (identity is always added).
+# With family-diverse selection, 4 slots = the best candidate of each of the
+# paper's four techniques — selection literally becomes Fig. 6's "best of
+# the four", with the analytic proxy only choosing each family's parameter.
+DEFAULT_TOP_K = 4
+# phase-2 verification chunk granularity (memory bound, not a perf knob)
+DEFAULT_CHUNK_ELEMS = 1 << 20
+
 
 @dataclasses.dataclass
 class Encoded:
@@ -75,8 +104,8 @@ class Encoded:
     n_active: int               # elements that went through the transform
 
     def metadata_bytes(self) -> int:
-        t = -(-self.meta.nbits() // 8) if self.meta is not None else 16
-        return t + len(self.exponents_z) + len(self.signs_z) + len(self.passthrough_z)
+        return (_meta_bytes(self.meta) + len(self.exponents_z)
+                + len(self.signs_z) + len(self.passthrough_z))
 
 
 def _pack_z(bits: np.ndarray) -> bytes:
@@ -87,6 +116,39 @@ def _unpack_z(z: bytes, n: int) -> np.ndarray:
     return np.unpackbits(np.frombuffer(zlib.decompress(z), np.uint8))[:n]
 
 
+def _slice_meta(meta, s: int, e: int):
+    """Slice per-sample metadata fields for chunked inverse verification."""
+    if isinstance(meta, T.ShiftSaveEvenMeta):
+        return dataclasses.replace(
+            meta, chunk_ids=meta.chunk_ids[s:e], evenness=meta.evenness[s:e]
+        )
+    return meta
+
+
+def _meta_bytes(meta) -> int:
+    return -(-meta.nbits() // 8) if meta is not None else 16
+
+
+def _apply_and_verify(name, p, X, spec, chunk_elems=DEFAULT_CHUNK_ELEMS):
+    """Run candidate `name` forward on the full significand array, verify the
+    inverse chunk-by-chunk, and fetch (values, offsets, verdict) in a single
+    device round-trip.  Returns None if the round-trip fails; raises
+    TransformError if the transform's domain conditions reject the data."""
+    fwd, inv = T.TRANSFORMS[name]
+    Xt, off, meta = fwd(X, spec=spec, **p)
+    n = int(X.shape[0])
+    ok = jnp.bool_(True)
+    for s in range(0, n, chunk_elems):
+        e = min(s + chunk_elems, n)
+        Xr = inv(Xt[s:e], off[s:e], _slice_meta(meta, s, e), spec=spec)
+        ok = ok & jnp.all(Xr == X[s:e])
+    vals = from_significand_int(Xt, off.astype(jnp.int32), spec)
+    vals_np, ok_np = jax.device_get((vals, ok))
+    if not bool(ok_np):
+        return None
+    return vals_np, meta
+
+
 def encode(
     x,
     method: str = "auto",
@@ -95,11 +157,15 @@ def encode(
     size_fn: Callable[[bytes], int] | None = None,
     spec: FloatSpec | None = None,
     presample: int | None = None,
+    sample_elems: int = DEFAULT_SAMPLE_ELEMS,
+    top_k: int = DEFAULT_TOP_K,
+    chunk_elems: int = DEFAULT_CHUNK_ELEMS,
 ) -> Encoded:
     """presample: if set and method=='auto', candidate selection runs on a
-    strided sample of `presample` elements first (§Perf C: ~n/presample x
-    faster selection), then the winner is applied (and round-trip verified)
-    on the full array, falling back to full auto on failure."""
+    strided sample of `presample` elements first (legacy §Perf C knob — the
+    analytic engine already samples internally), then the winner is applied
+    (and round-trip verified) on the full array, falling back to full auto
+    on failure."""
     if presample and method == "auto":
         xf = np.asarray(x).reshape(-1)
         if xf.size > presample:
@@ -107,15 +173,20 @@ def encode(
             pick = encode(
                 xf[:: step][:presample], method="auto",
                 candidates=candidates, size_fn=size_fn, spec=spec,
+                sample_elems=sample_elems, top_k=top_k,
+                chunk_elems=chunk_elems,
             )
             try:
                 return encode(
                     x, method=pick.method, params=pick.params,
-                    size_fn=size_fn, spec=spec,
+                    size_fn=size_fn, spec=spec, chunk_elems=chunk_elems,
                 )
             except T.TransformError:
                 pass  # sampled pick infeasible on full data: full search
-    return _encode_full(x, method, params, candidates, size_fn, spec)
+    return _encode_full(
+        x, method, params, candidates, size_fn, spec,
+        sample_elems=sample_elems, top_k=top_k, chunk_elems=chunk_elems,
+    )
 
 
 def _encode_full(
@@ -125,6 +196,9 @@ def _encode_full(
     candidates=DEFAULT_CANDIDATES,
     size_fn: Callable[[bytes], int] | None = None,
     spec: FloatSpec | None = None,
+    sample_elems: int = DEFAULT_SAMPLE_ELEMS,
+    top_k: int = DEFAULT_TOP_K,
+    chunk_elems: int = DEFAULT_CHUNK_ELEMS,
 ) -> Encoded:
     x = jnp.asarray(x)
     spec = spec or spec_for(x)
@@ -148,21 +222,256 @@ def _encode_full(
     y01, exps, signs = normalize_to_binade(active, spec)
     X = significand_int(y01, 0, spec)
 
-    exponents_z = compress_int_stream(np.asarray(exps, np.int64))
-    signs_z = _pack_z(np.asarray(signs, np.uint8))
-    passthrough_z = _pack_z(pass_mask)
+    exps_np = np.asarray(exps, np.int64)
+    signs_np = np.asarray(signs, np.uint8)
 
+    # full-array normalization metadata is only packed when a non-identity
+    # candidate actually ships (§Perf: zlib'ing 100k exponents before
+    # selection cost more than the whole analytic selection phase)
+    _packed_common: list = []
+
+    def _pack_common():
+        if not _packed_common:
+            _packed_common.append((
+                compress_int_stream(exps_np),
+                _pack_z(signs_np),
+                _pack_z(pass_mask),
+            ))
+        return _packed_common[0]
+
+    analytic = size_fn is None and method == "auto"
     if size_fn is None:
         size_fn = lambda b: len(zlib.compress(b, 6))
 
-    trials = [(method, params or {})] if method != "auto" else list(candidates)
-    best = None
+    def _identity_encoded() -> Encoded:
+        return Encoded(
+            method="identity", params={}, data=xf.copy().reshape(np.shape(x)),
+            meta=None, exponents_z=b"", signs_z=b"", passthrough_z=b"",
+            spec_name=spec.name, n=n, n_active=0,
+        )
+
+    def _finish(name, p, vals_np, meta) -> Encoded:
+        data = xf.copy()
+        data[finite] = vals_np
+        exponents_z, signs_z, passthrough_z = _pack_common()
+        return Encoded(
+            method=name, params=p, data=data.reshape(np.shape(x)), meta=meta,
+            exponents_z=exponents_z, signs_z=signs_z,
+            passthrough_z=passthrough_z, spec_name=spec.name, n=n,
+            n_active=int(active.shape[0]),
+        )
+
+    if method != "auto":
+        if method == "identity":
+            return _identity_encoded()
+        applied = _apply_and_verify(method, params or {}, X, spec, chunk_elems)
+        if applied is None:
+            raise T.TransformError("no transform candidate round-tripped")
+        return _finish(method, params or {}, *applied)
+
+    # identity participates (as scored baseline and terminal fallback) only
+    # when the caller's candidate list includes it — a restricted candidate
+    # list must never ship an unlisted method (seed semantics)
+    has_identity = any(n_ == "identity" for n_, _ in candidates)
+    first_applied = None
+    if analytic:
+        # selection-time estimate of the shared normalization metadata:
+        # pack a strided sample of exponents/signs and scale up (it is a
+        # constant added to every non-identity candidate, so only its
+        # magnitude vs identity matters, not its exact value)
+        exps_s = _strided(exps_np, sample_elems)
+        sc = exps_np.shape[0] / max(exps_s.shape[0], 1)
+        pass_s = _strided(pass_mask, sample_elems)
+        common_est = (
+            len(compress_int_stream(exps_s))
+            + len(_pack_z(_strided(signs_np, sample_elems)))
+        ) * sc + len(_pack_z(pass_s)) * (
+            pass_mask.shape[0] / max(pass_s.shape[0], 1)
+        )
+        ranked = _select_analytic(
+            xf, finite, X, spec, candidates, size_fn, common_est,
+            sample_elems, top_k, has_identity,
+        )
+    else:
+        exponents_z, signs_z, passthrough_z = _pack_common()
+        common_meta = len(exponents_z) + len(signs_z) + len(passthrough_z)
+        ranked, first_applied = _select_exact(
+            xf, finite, X, spec, candidates, size_fn, common_meta
+        )
+
+    # phase 2: apply + verify finalists in rank order
+    for i, (name, p) in enumerate(ranked):
+        if name == "identity":
+            return _identity_encoded()
+        if i == 0 and first_applied is not None:
+            # exact path: _select_exact already round-trip verified the
+            # winner on the full array — don't redo the transform
+            return _finish(name, p, *first_applied)
+        try:
+            applied = _apply_and_verify(name, p, X, spec, chunk_elems)
+        except T.TransformError:
+            continue
+        if applied is None:
+            continue  # failed round-trip: rejected, never shipped
+        return _finish(name, p, *applied)
+    if has_identity:
+        return _identity_encoded()
+    raise T.TransformError("no transform candidate round-tripped")
+
+
+# ---------------------------------------------------------------------------
+# phase 1: candidate selection
+# ---------------------------------------------------------------------------
+
+def _strided(a, limit: int):
+    if a.shape[0] <= limit:
+        return a
+    step = -(-a.shape[0] // limit)   # ceil: the sample spans the whole array
+    return a[::step][:limit]
+
+
+def _scaled_meta_bytes(meta, scale: float) -> float:
+    """Candidate metadata cost extrapolated from the sample to the full set.
+
+    Per-sample metadata (shift&save-evenness chunk ids / evenness bits)
+    grows with n and must be scaled; the other transforms carry fixed-size
+    headers."""
+    mb = _meta_bytes(meta)
+    if isinstance(meta, T.ShiftSaveEvenMeta):
+        return mb * scale
+    return float(mb)
+
+
+
+
+def _select_analytic(
+    xf, finite, X, spec, candidates, size_fn, common_meta,
+    sample_elems, top_k, has_identity=True,
+):
+    """Analytic sample-select: rank candidates by the fused plane-stats size
+    estimate; re-score the top finalists (+ identity) with the real
+    compressor.  Returns candidate (name, params) in preference order."""
+    n_active = int(X.shape[0])
+    Xs = _strided(X, sample_elems)
+    n_s = int(Xs.shape[0])
+    scale = n_active / n_s
+
+    # sample extrema computed ONCE and shared by the whole candidate grid;
+    # the single domain check below covers every fused scorer dispatch
+    mn, mx = jax.device_get((jnp.min(Xs), jnp.max(Xs)))
+    extrema = (int(mn), int(mx))
+    T._check_domain(Xs, spec, extrema)
+
+    scores: list[S.CandidateScore] = []
+    deferred: list[tuple[str, dict]] = []  # valid on full, unscorable on sample
+    for name, p in candidates:
+        if name == "identity":
+            continue
+        try:
+            dev = S.score_candidate(name, p, Xs, spec, extrema,
+                                    full_n=n_active)
+        except T.TransformError:
+            continue
+        if dev == "defer":
+            deferred.append((name, p))
+            continue
+        if dev is not None:
+            scores.append(S.CandidateScore(name=name, params=p, _dev=dev))
+            continue
+        # transform without a fused scorer: generic forward + scoring
+        fwd, _ = T.TRANSFORMS[name]
+        try:
+            Xt, off, meta = fwd(Xs, spec=spec, extrema=extrema, **p)
+        except T.TransformError:
+            continue
+        scores.append(
+            S.CandidateScore(
+                name=name, params=p,
+                meta_bytes=_scaled_meta_bytes(meta, scale),
+                _dev=S.score_significands(Xt, off, spec),
+            )
+        )
+    S.fetch_scores(scores)  # single device round-trip for all estimates
+    scores = [s for s in scores if s.valid]
+    for s in scores:
+        s.est_bytes *= scale
+        s.meta_bytes += s.per_sample_bytes * scale
+
+    ranked = sorted(scores, key=lambda s: s.total)
+    # family-diverse finalists: the proxy's residual error is correlated
+    # within a transform family (same structural model), so the top-k slots
+    # go to the best candidate of k DIFFERENT families first, then refill
+    # by rank.  The exact re-scoring below absorbs family-level proxy bias.
+    finalists: list[tuple[str, dict]] = []
+    seen_families: set[str] = set()
+    for s in ranked:
+        if len(finalists) >= max(top_k, 1):
+            break
+        if s.name in seen_families:
+            continue
+        seen_families.add(s.name)
+        finalists.append((s.name, s.params))
+    for s in ranked:
+        if len(finalists) >= max(top_k, 1):
+            break
+        if (s.name, s.params) not in finalists:
+            finalists.append((s.name, s.params))
+
+    # exact scoring of finalists + identity baseline, on the sampled stream
+    exact: list[tuple[float, str, dict]] = []
+    if has_identity:
+        xs_all = _strided(xf, sample_elems)
+        exact.append(
+            (size_fn(np.ascontiguousarray(xs_all).tobytes())
+             * (xf.shape[0] / xs_all.shape[0]) + 16, "identity", {})
+        )
+    # passthrough bytes ship verbatim in every non-identity candidate's data
+    # stream too (seed scored xf with data[finite]=vals); a constant term,
+    # but identity's estimate includes those bytes so finalists must as well
+    xp = xf[~finite]
+    if xp.size:
+        xps = _strided(xp, sample_elems)
+        pass_cost = (
+            size_fn(np.ascontiguousarray(xps).tobytes()) * (xp.size / xps.size)
+        )
+    else:
+        pass_cost = 0.0
+    for name, p in finalists:
+        fwd, _ = T.TRANSFORMS[name]
+        try:
+            Xt, off, meta = fwd(Xs, spec=spec, extrema=extrema, **p)
+        except T.TransformError:
+            continue
+        vals = from_significand_int(Xt, off.astype(jnp.int32), spec)
+        exact.append(
+            (size_fn(np.asarray(vals).tobytes()) * scale + pass_cost
+             + _scaled_meta_bytes(meta, scale) + common_meta, name, p)
+        )
+    exact.sort(key=lambda t: t[0])
+    head = [(name, p) for _, name, p in exact]
+    # preserve the seed's try-every-candidate guarantee: if every finalist
+    # fails full-array apply/verify, phase 2 falls through to the remaining
+    # scored candidates (analytic order) and then the sample-unscorable ones
+    tail = [(s.name, s.params) for s in ranked
+            if (s.name, s.params) not in head]
+    return head + tail + deferred
+
+
+def _select_exact(xf, finite, X, spec, candidates, size_fn, common_meta):
+    """Seed-exact selection: score every candidate with the real compressor
+    on the full array (used when a custom size_fn is supplied, so
+    compressor-matched selection keeps its semantics).
+
+    Returns (ranked, first_applied): every candidate here is already
+    round-trip verified on the full array, so the best non-identity
+    candidate's (values, meta) ride along for phase 2 to ship directly
+    instead of recomputing the winning transform."""
+    trials = list(candidates)
+    scored: list[tuple[float, str, dict]] = []
+    best = None  # (score, name, params, vals, meta) of best non-identity
     for name, p in trials:
         if name == "identity":
-            # verbatim no-prep baseline: no normalization metadata at all
-            score = size_fn(xf.tobytes()) + 16
-            if best is None or score < best[0]:
-                best = (score, "identity", {}, xf.copy(), None, True)
+            scored.append((size_fn(xf.tobytes()) + 16, "identity", {}))
             continue
         fwd, inv = T.TRANSFORMS[name]
         try:
@@ -175,37 +484,18 @@ def _encode_full(
         vals = np.asarray(from_significand_int(Xt, off.astype(jnp.int32), spec))
         data = xf.copy()
         data[finite] = vals
-        meta_bytes = -(-meta.nbits() // 8) if meta is not None else 16
-        score = (
-            size_fn(data.tobytes())
-            + meta_bytes
-            + len(exponents_z)
-            + len(signs_z)
-            + len(passthrough_z)
-        )
+        score = size_fn(data.tobytes()) + _meta_bytes(meta) + common_meta
+        scored.append((score, name, p))
         if best is None or score < best[0]:
-            best = (score, name, p, data, meta, False)
-    if best is None:
+            best = (score, name, p, vals, meta)
+    if not scored:
         raise T.TransformError("no transform candidate round-tripped")
-    _, name, p, data, meta, verbatim = best
-    if verbatim:
-        return Encoded(
-            method="identity", params={}, data=data.reshape(np.shape(x)), meta=None,
-            exponents_z=b"", signs_z=b"", passthrough_z=b"",
-            spec_name=spec.name, n=n, n_active=0,
-        )
-    return Encoded(
-        method=name,
-        params=p,
-        data=data.reshape(np.shape(x)),
-        meta=meta,
-        exponents_z=exponents_z,
-        signs_z=signs_z,
-        passthrough_z=passthrough_z,
-        spec_name=spec.name,
-        n=n,
-        n_active=int(active.shape[0]),
-    )
+    scored.sort(key=lambda t: t[0])
+    ranked = [(name, p) for _, name, p in scored]
+    first_applied = None
+    if best is not None and ranked[0] == (best[1], best[2]):
+        first_applied = (best[3], best[4])
+    return ranked, first_applied
 
 
 def decode(enc: Encoded) -> np.ndarray:

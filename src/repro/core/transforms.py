@@ -71,14 +71,24 @@ def _as_i64(x):
     return jnp.asarray(x, jnp.int64)
 
 
-def _check_domain(X, spec: FloatSpec):
+def _check_domain(X, spec: FloatSpec, extrema=None):
+    """Validate X in [2^l, 2^{l+1}); returns (min, max) so callers reuse the
+    extrema instead of re-syncing (§Perf: one host round-trip per forward,
+    no full-array device->host transfer).  ``extrema`` short-circuits the
+    device round-trip entirely — the auto-candidate engine computes the
+    sample extrema once and shares them across the whole candidate grid."""
     lo = 1 << spec.man_bits
     hi = lo << 1
-    Xn = np.asarray(X)
-    if Xn.size == 0:
+    if np.size(X) == 0:
         raise TransformError("empty dataset")
-    if Xn.min() < lo or Xn.max() >= hi:
+    if extrema is not None:
+        mn, mx = int(extrema[0]), int(extrema[1])
+    else:
+        mn, mx = jax.device_get((jnp.min(X), jnp.max(X)))
+        mn, mx = int(mn), int(mx)
+    if mn < lo or mx >= hi:
         raise TransformError("significands must lie in [2^l, 2^{l+1})")
+    return mn, mx
 
 
 # ===========================================================================
@@ -101,20 +111,12 @@ class CompactBinsMeta:
         )
 
 
-def compact_bins_forward(X, n_bins: int, spec: FloatSpec = F64):
-    """Cluster into ``n_bins`` by largest gaps; pack bins toward binade top.
-
-    In-binade shifts at the shared quantum are exact unconditionally
-    (sums of multiples of ULP staying under 2^{E+1} are representable).
-    """
-    X = _as_i64(X)
-    _check_domain(X, spec)
-    k = int(n_bins)
-    if k < 1:
-        raise TransformError("n_bins must be >= 1")
-    if k > int(X.shape[0]):
-        raise TransformError("n_bins exceeds dataset size")
-    top = (jnp.int64(1) << (spec.man_bits + 1)) - 2
+@functools.partial(jax.jit, static_argnames=("k", "l"))
+def _cb_core(X, k: int, l: int):
+    """Fused §3.1 arithmetic, shared by the forward transform and the
+    auto-candidate scorer (core/scoring.py) so the two can never drift.
+    Returns (Xt, shifts, new_lo, fits)."""
+    top = (jnp.int64(1) << (l + 1)) - 2
 
     Xs = jnp.sort(X)
     if k > 1:
@@ -141,13 +143,30 @@ def compact_bins_forward(X, n_bins: int, spec: FloatSpec = F64):
     new_lo = top + 2 - occupied
     shifts = new_lo - lo_all                                # int64[k], >= 0 iff fits
 
-    if bool(jnp.any(new_lo < (jnp.int64(1) << spec.man_bits))):
-        raise TransformError("bins do not fit in one binade after packing")
-
+    fits = ~jnp.any(new_lo < (jnp.int64(1) << l))
     bin_id = jnp.searchsorted(bounds, X, side="right") if k > 1 else jnp.zeros(
         X.shape, jnp.int64
     )
     Xt = X + shifts[bin_id]
+    return Xt, shifts, new_lo, fits
+
+
+def compact_bins_forward(X, n_bins: int, spec: FloatSpec = F64, extrema=None):
+    """Cluster into ``n_bins`` by largest gaps; pack bins toward binade top.
+
+    In-binade shifts at the shared quantum are exact unconditionally
+    (sums of multiples of ULP staying under 2^{E+1} are representable).
+    """
+    X = _as_i64(X)
+    _check_domain(X, spec, extrema)
+    k = int(n_bins)
+    if k < 1:
+        raise TransformError("n_bins must be >= 1")
+    if k > int(X.shape[0]):
+        raise TransformError("n_bins exceeds dataset size")
+    Xt, shifts, new_lo, fits = _cb_core(X, k=k, l=spec.man_bits)
+    if not bool(fits):
+        raise TransformError("bins do not fit in one binade after packing")
     thresholds = new_lo[1:]                                 # transformed-space
     meta = CompactBinsMeta(
         e_star=0,
@@ -190,6 +209,22 @@ def _ms_schedule(D: int, x_max: int, spec: FloatSpec):
     return a1, a_const, thresh
 
 
+def _ms_feasible(D: int, x_min: int, x_max: int, max_iter: int,
+                 spec: FloatSpec):
+    """Shared host-side feasibility check + schedule for §3.2, used by both
+    the forward transform and the phase-1 scorer (single source of truth)."""
+    l = spec.man_bits
+    if not (1 <= D <= l - 2):
+        raise TransformError(f"multiply&shift needs 1 <= D <= {l-2}")
+    a1, a_const, thresh = _ms_schedule(D, x_max, spec)
+    # feasibility precheck (§Perf C): iterations ~ span / a_const
+    if (x_max - x_min) // max(a_const, 1) > max_iter + 1:
+        raise TransformError(
+            f"multiply&shift would need > {max_iter} iterations (D={D})"
+        )
+    return a1, a_const, thresh
+
+
 @functools.partial(jax.jit, static_argnames=("max_iter",))
 def _ms_loop(X, a1, a_const, thresh, max_iter: int):
     """jit'd §3.2 iteration (§Perf C: the eager while_loop ran at 5 MB/s;
@@ -213,7 +248,7 @@ def _ms_loop(X, a1, a_const, thresh, max_iter: int):
     return Xf, off, active
 
 
-def multiply_shift_forward(X, D: int, max_iter: int = 4096, spec: FloatSpec = F64):
+def multiply_shift_forward(X, D: int, max_iter: int = 4096, spec: FloatSpec = F64, extrema=None):
     """Eq.(8): f(x) = (2 ⊗ x) ⊕ A_i, iterated; capture at top-of-binade window.
 
     Integer domain: scale doubles each iteration (the ⊗2, exact — exponent
@@ -222,18 +257,8 @@ def multiply_shift_forward(X, D: int, max_iter: int = 4096, spec: FloatSpec = F6
     computed").  Returns (X', binade_offset, meta).
     """
     X = _as_i64(X)
-    _check_domain(X, spec)
-    l = spec.man_bits
-    if not (1 <= D <= l - 2):
-        raise TransformError(f"multiply&shift needs 1 <= D <= {l-2}")
-    x_max = int(X.max())
-    x_min = int(X.min())
-    a1, a_const, thresh = _ms_schedule(D, x_max, spec)
-    # feasibility precheck (§Perf C): iterations ~ span / a_const
-    if (x_max - x_min) // max(a_const, 1) > max_iter + 1:
-        raise TransformError(
-            f"multiply&shift would need > {max_iter} iterations (D={D})"
-        )
+    x_min, x_max = _check_domain(X, spec, extrema)
+    a1, a_const, thresh = _ms_feasible(D, x_min, x_max, max_iter, spec)
     Xf, off, active = _ms_loop(
         X, jnp.int64(a1), jnp.int64(a_const), jnp.int64(thresh), max_iter
     )
@@ -284,6 +309,30 @@ class ShiftSeparateMeta:
         return _HEADER_BITS + 2 * 64  # x_min, x_max
 
 
+def _ss_feasible(D: int, x_min: int, x_max: int, max_iter: int,
+                 spec: FloatSpec):
+    """Shared host-side feasibility check + schedule for §3.3, used by both
+    the forward transform and the phase-1 scorer (single source of truth)."""
+    l = spec.man_bits
+    if not (1 <= D <= l - 2):
+        raise TransformError(f"shift&separate needs 1 <= D <= {l-2}")
+    a_align, thresh_cap, sched = _ss_schedule(D, x_min, x_max, max_iter, spec)
+    if not sched or not sched[-1][3]:
+        raise TransformError("shift&separate: domain violation (W too large)")
+    return a_align, thresh_cap, sched
+
+
+def _sse_feasible(D: int, spec: FloatSpec) -> int:
+    """Shared host-side feasibility check for §3.4; returns w_eff."""
+    l = spec.man_bits
+    if not (1 <= D <= l - 1):
+        raise TransformError(f"shift&save-evenness needs 1 <= D <= {l-1}")
+    w_eff = (1 << (l + 1 - D)) - 2
+    if w_eff < 1:
+        raise TransformError("window too small")
+    return w_eff
+
+
 def _ss_schedule(D: int, x_min: int, x_max: int, n_iter: int, spec: FloatSpec):
     """Deterministic per-iteration (Ae, Ao, T, parity-threshold) schedule.
 
@@ -314,54 +363,81 @@ def _ss_schedule(D: int, x_min: int, x_max: int, n_iter: int, spec: FloatSpec):
     return a_align, thresh_cap, sched
 
 
-def shift_separate_forward(X, D: int, max_iter: int = 64, spec: FloatSpec = F64):
+@jax.jit
+def _ss_loop(Xc, Ae, Ao, thresh_cap):
+    """Fused §3.3 iteration: one `lax.scan` over the precomputed (Ae, Ao)
+    schedule (§Perf: the eager loop synced host<->device with a
+    `bool(jnp.any(...))` every iteration; mirrors the `_ms_loop` treatment).
+    Returns (X', offsets, any_still_active, max_offset) as device values so
+    the caller fetches everything in a single round-trip."""
+
+    def step(carry, a):
+        X, off, active = carry
+        ae, ao = a
+        A = jnp.where((X & 1).astype(bool), ao, ae)
+        Y = (X + A) >> 1
+        Xn = jnp.where(active, Y, X)
+        offn = off + active.astype(jnp.int32)
+        return (Xn, offn, active & (Xn < thresh_cap)), None
+
+    init = (Xc, jnp.zeros(Xc.shape, jnp.int32), jnp.ones(Xc.shape, bool))
+    (Xf, off, active), _ = lax.scan(step, init, (Ae, Ao))
+    return Xf, off, jnp.any(active), off.max()
+
+
+def shift_separate_forward(X, D: int, max_iter: int = 64, spec: FloatSpec = F64, extrema=None):
     """Eq.(9)/(10): parity-matched addends; even/odd images kept disjoint so
     the inverse recovers evenness from position (Eq. 11). Returns
     (X', binade_offset, meta)."""
     X = _as_i64(X)
-    _check_domain(X, spec)
-    l = spec.man_bits
-    if not (1 <= D <= l - 2):
-        raise TransformError(f"shift&separate needs 1 <= D <= {l-2}")
-    x_min, x_max = int(X.min()), int(X.max())
-    a_align, thresh_cap, sched = _ss_schedule(D, x_min, x_max, max_iter, spec)
-    if not sched or not sched[-1][3]:
-        raise TransformError("shift&separate: domain violation (W too large)")
+    x_min, x_max = _check_domain(X, spec, extrema)
+    a_align, thresh_cap, sched = _ss_feasible(D, x_min, x_max, max_iter, spec)
 
-    Xc = X + jnp.int64(a_align)
-    off = jnp.zeros(X.shape, jnp.int32)
-    active = jnp.ones(X.shape, bool)
-    for (Ae, Ao, T, ok) in sched:
-        if not ok:
-            break
-        A = jnp.where(Xc & 1, jnp.int64(Ao), jnp.int64(Ae))
-        Y = (Xc + A) >> 1
-        Xc = jnp.where(active, Y, Xc)
-        off = off + active.astype(jnp.int32)
-        active = active & (Xc < thresh_cap)
-        if not bool(jnp.any(active)):
-            break
-    if bool(jnp.any(active)):
+    valid = [(Ae, Ao) for (Ae, Ao, _T, ok) in sched if ok]
+    Xf, off, any_active, max_off = _ss_loop(
+        X + jnp.int64(a_align),
+        jnp.asarray([a for a, _ in valid], jnp.int64),
+        jnp.asarray([a for _, a in valid], jnp.int64),
+        jnp.int64(thresh_cap),
+    )
+    any_active, max_off = jax.device_get((any_active, max_off))
+    if bool(any_active):
         raise TransformError(
             f"shift&separate did not converge (D={D}); paper plateau regime"
         )
-    n_iter = int(off.max())
+    n_iter = int(max_off)
     meta = ShiftSeparateMeta(e_star=0, D=D, x_min=x_min, x_max=x_max, n_iter=n_iter)
-    return Xc, off, meta
+    return Xf, off, meta
+
+
+@jax.jit
+def _ss_inv_loop(Xt, off, Ae, Ao, T, its):
+    def step(carry, a):
+        X, offc = carry
+        ae, ao, t, it = a
+        sel = offc == it
+        odd = X < t
+        Xprev = (X << 1) - jnp.where(odd, ao, ae)
+        return (jnp.where(sel, Xprev, X), jnp.where(sel, offc - 1, offc)), None
+
+    (Xr, _), _ = lax.scan(step, (Xt, off), (Ae, Ao, T, its))
+    return Xr
 
 
 def shift_separate_inverse(Xt, offsets, meta: ShiftSeparateMeta, spec: FloatSpec = F64):
     Xt = _as_i64(Xt)
     off = jnp.asarray(offsets, jnp.int32)
     a_align, _, sched = _ss_schedule(meta.D, meta.x_min, meta.x_max, meta.n_iter, spec)
-    for k in range(meta.n_iter, 0, -1):
-        Ae, Ao, T, _ = sched[k - 1]
-        sel = off == k
-        odd = Xt < T
-        Y2 = Xt << 1
-        Xprev = Y2 - jnp.where(odd, jnp.int64(Ao), jnp.int64(Ae))
-        Xt = jnp.where(sel, Xprev, Xt)
-        off = jnp.where(sel, off - 1, off)
+    if meta.n_iter:
+        steps = sched[: meta.n_iter][::-1]            # iteration n_iter .. 1
+        Xt = _ss_inv_loop(
+            Xt,
+            off,
+            jnp.asarray([s[0] for s in steps], jnp.int64),
+            jnp.asarray([s[1] for s in steps], jnp.int64),
+            jnp.asarray([s[2] for s in steps], jnp.int64),
+            jnp.arange(meta.n_iter, 0, -1, dtype=jnp.int32),
+        )
     return Xt - jnp.int64(a_align)
 
 
@@ -392,7 +468,20 @@ class ShiftSaveEvenMeta:
         return _HEADER_BITS + 64 + 8 * (len(ids_z) + len(even_z))
 
 
-def shift_save_even_forward(X, D: int, spec: FloatSpec = F64):
+@jax.jit
+def _sse_core(X, x_min, w_eff, top):
+    """Fused §3.4 arithmetic: one dispatch per candidate instead of ~10
+    eager ops (§Perf — this runs once per D in the auto-candidate grid)."""
+    j = (X - x_min) // w_eff
+    a_base = top - x_min - j * w_eff
+    a_even = a_base + (a_base & 1)            # round UP to even
+    parity = X & 1
+    A = a_even + parity                       # parity(A) == parity(X) => exact
+    Y = (X + A) >> 1                          # significand at binade e*+1
+    return Y, j, parity.astype(jnp.uint8), j.max()
+
+
+def shift_save_even_forward(X, D: int, spec: FloatSpec = F64, extrema=None):
     """§3.4: single-pass chunk overlay with per-sample evenness metadata.
 
     Equivalent one-pass form of the paper's iteration (each iteration of the
@@ -403,29 +492,20 @@ def shift_save_even_forward(X, D: int, spec: FloatSpec = F64):
     bits = 0, Eq. 7). Returns (X', meta); binade offset is 1 for all samples.
     """
     X = _as_i64(X)
-    _check_domain(X, spec)
+    x_min, _x_max = _check_domain(X, spec, extrema)
     l = spec.man_bits
-    if not (1 <= D <= l - 1):
-        raise TransformError(f"shift&save-evenness needs 1 <= D <= {l-1}")
-    w_win = jnp.int64(1) << (l + 1 - D)
-    w_eff = w_win - 2
-    if int(w_eff) < 1:
-        raise TransformError("window too small")
-    x_min = int(X.min())
-    j = (X - x_min) // w_eff
-    a_base = (jnp.int64(1) << (l + 1)) - x_min - j * w_eff
-    a_even = a_base + (a_base & 1)            # round UP to even
-    parity = (X & 1).astype(jnp.int64)
-    A = a_even + parity                       # parity(A) == parity(X) => exact
-    Y2 = X + A                                # even, in [2^{l+1}, 2^{l+1}+w_eff+2)
-    Y = Y2 >> 1                               # significand at binade e*+1
+    w_eff = _sse_feasible(D, spec)
+    Y, j, parity, j_max = _sse_core(
+        X, jnp.int64(x_min), jnp.int64(w_eff), jnp.int64(1) << (l + 1)
+    )
+    j_np, parity_np, j_max = jax.device_get((j, parity, j_max))
     meta = ShiftSaveEvenMeta(
         e_star=0,
         D=D,
         x_min=x_min,
-        n_chunks=int(j.max()) + 1,
-        chunk_ids=np.asarray(j, np.int64),
-        evenness=np.asarray(parity, np.uint8),
+        n_chunks=int(j_max) + 1,
+        chunk_ids=np.asarray(j_np, np.int64),
+        evenness=parity_np,
     )
     return Y, meta
 
@@ -445,8 +525,8 @@ def shift_save_even_inverse(Yt, meta: ShiftSaveEvenMeta, spec: FloatSpec = F64):
 # registry (unified (forward, inverse) returning (X', offsets, meta))
 # ===========================================================================
 
-def _cb_fwd(X, *, n_bins=8, spec=F64, **_):
-    Xt, meta = compact_bins_forward(X, n_bins, spec)
+def _cb_fwd(X, *, n_bins=8, spec=F64, extrema=None, **_):
+    Xt, meta = compact_bins_forward(X, n_bins, spec, extrema)
     return Xt, jnp.zeros(Xt.shape, jnp.int32), meta
 
 
@@ -454,16 +534,16 @@ def _cb_inv(Xt, offsets, meta, spec=F64):
     return compact_bins_inverse(Xt, meta)
 
 
-def _ms_fwd(X, *, D=8, max_iter=4096, spec=F64, **_):
-    return multiply_shift_forward(X, D, max_iter, spec)
+def _ms_fwd(X, *, D=8, max_iter=4096, spec=F64, extrema=None, **_):
+    return multiply_shift_forward(X, D, max_iter, spec, extrema)
 
 
-def _ss_fwd(X, *, D=4, max_iter=64, spec=F64, **_):
-    return shift_separate_forward(X, D, max_iter, spec)
+def _ss_fwd(X, *, D=4, max_iter=64, spec=F64, extrema=None, **_):
+    return shift_separate_forward(X, D, max_iter, spec, extrema)
 
 
-def _se_fwd(X, *, D=12, spec=F64, **_):
-    Y, meta = shift_save_even_forward(X, D, spec)
+def _se_fwd(X, *, D=12, spec=F64, extrema=None, **_):
+    Y, meta = shift_save_even_forward(X, D, spec, extrema)
     return Y, jnp.ones(Y.shape, jnp.int32), meta
 
 

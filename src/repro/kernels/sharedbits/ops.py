@@ -34,6 +34,35 @@ def shared_mask_u64(words: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
     return (mhi.astype(jnp.uint64) << jnp.uint64(32)) | mlo.astype(jnp.uint64)
 
 
+@jax.jit
+def plane_stats_u64(words: jnp.ndarray):
+    """uint64[n] -> (ones[64], transitions[64], shared_mask) in ONE fused pass.
+
+    ``ones[p]``        — set-bit count of plane p (p = bit significance);
+    ``transitions[p]`` — bit-p flips between consecutive words (run structure);
+    ``shared_mask``    — uint64 mask of positions where all words agree,
+                         derived from the plane counts (``ones in {0, n}``),
+                         which equals the AND/OR kernel reduction of
+                         :func:`shared_mask_u64` (asserted in tests).
+
+    This is the scoring engine's analytic front-end (core/scoring.py): the
+    auto-candidate search calls it once per candidate instead of compressing
+    the full stream, so the whole statistic gathering stays on device and the
+    host fetches only the final score scalars.
+    """
+    n = words.shape[0]
+    shifts = jnp.arange(64, dtype=jnp.uint64)
+    one = jnp.uint64(1)
+    bits = ((words[:, None] >> shifts[None, :]) & one).astype(jnp.int32)
+    ones = bits.sum(axis=0)
+    flips = words[1:] ^ words[:-1]
+    tbits = ((flips[:, None] >> shifts[None, :]) & one).astype(jnp.int32)
+    transitions = tbits.sum(axis=0)
+    shared = (ones == 0) | (ones == n)
+    mask = (shared.astype(jnp.uint64) << shifts).sum()
+    return ones, transitions, mask
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def shared_mask_floats(x: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
     b = lax.bitcast_convert_type(

@@ -1,0 +1,173 @@
+"""Test bootstrap.
+
+The test suite's property tests use `hypothesis`, which is not available in
+every runtime image (and the offline container cannot install wheels).  The
+tests only use a small strategy surface — ``integers``, ``floats`` and
+``lists`` with no fixture mixing — so when the real library is missing we
+register a deterministic miniature stand-in under the same module name.
+With `hypothesis` installed, the real library is used untouched.
+"""
+from __future__ import annotations
+
+import importlib.util
+import math
+import random
+import struct
+import sys
+import types
+
+if importlib.util.find_spec("hypothesis") is None:  # pragma: no branch
+
+    class _Strategy:
+        """A draw function plus a list of always-tried edge examples."""
+
+        def __init__(self, draw, edges=()):
+            self.draw = draw
+            self.edges = list(edges)
+
+    def _integers(min_value, max_value):
+        edges = [min_value, max_value]
+        if min_value < 0 < max_value:
+            edges.append(0)
+        return _Strategy(lambda r: r.randint(min_value, max_value), edges)
+
+    def _bits_to_float(bits):
+        return struct.unpack("<d", struct.pack("<Q", bits))[0]
+
+    def _floats(
+        min_value=None,
+        max_value=None,
+        allow_nan=None,
+        allow_infinity=None,
+        width=64,
+        exclude_min=False,
+        exclude_max=False,
+    ):
+        bounded = min_value is not None or max_value is not None
+        if allow_nan is None:
+            allow_nan = not bounded
+        if allow_infinity is None:
+            allow_infinity = not bounded
+
+        def draw(r):
+            if not bounded:
+                # random bit patterns cover signs, subnormals, zeros, exps
+                while True:
+                    v = _bits_to_float(r.getrandbits(64))
+                    if math.isnan(v) and not allow_nan:
+                        continue
+                    if math.isinf(v) and not allow_infinity:
+                        continue
+                    return v
+            lo = min_value if min_value is not None else -1e308
+            hi = max_value if max_value is not None else 1e308
+            if lo > 0 and hi / lo > 1e6:
+                # wide positive range: sample uniformly in log space
+                v = math.exp(r.uniform(math.log(lo), math.log(hi)))
+            else:
+                v = r.uniform(lo, hi)
+            v = min(max(v, lo), hi)
+            if exclude_max and v >= hi:
+                v = math.nextafter(hi, lo)
+            if exclude_min and v <= lo:
+                v = math.nextafter(lo, hi)
+            return v
+
+        edges = []
+        if bounded:
+            if min_value is not None and not exclude_min:
+                edges.append(float(min_value))
+            if max_value is not None and not exclude_max:
+                edges.append(float(max_value))
+        else:
+            edges = [0.0, -0.0, 1.0, -1.0, 5e-324, -5e-324, 1e308]
+            if allow_infinity:
+                edges += [math.inf, -math.inf]
+        return _Strategy(draw, edges)
+
+    def _lists(elements, min_size=0, max_size=None):
+        hi = max_size if max_size is not None else min_size + 20
+
+        def draw(r):
+            n = r.randint(min_size, hi)
+            return [elements.draw(r) for _ in range(n)]
+
+        edges = []
+        if min_size > 0:
+            edges.append([e for e in elements.edges[:min_size]] or None)
+            edges = [e for e in edges if e is not None and len(e) >= min_size]
+        return _Strategy(draw, edges)
+
+    def _sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda r: r.choice(seq), seq[:2])
+
+    def _booleans():
+        return _Strategy(lambda r: r.random() < 0.5, [False, True])
+
+    def _just(v):
+        return _Strategy(lambda r: v, [v])
+
+    _DEFAULT_MAX_EXAMPLES = 100
+
+    def _given(*strategies, **kw_strategies):
+        assert not kw_strategies, "mini-hypothesis supports positional only"
+
+        def deco(fn):
+            def wrapper(*fixture_args, **fixture_kwargs):
+                cfg = getattr(fn, "_mini_settings", None) or getattr(
+                    wrapper, "_mini_settings", {}
+                )
+                n = cfg.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+                rnd = random.Random(fn.__qualname__)
+                # edge examples first (aligned tuples), then random draws
+                n_edge = max((len(s.edges) for s in strategies), default=0)
+                for i in range(n_edge):
+                    ex = tuple(
+                        s.edges[i % len(s.edges)] if s.edges else s.draw(rnd)
+                        for s in strategies
+                    )
+                    _run_example(fn, fixture_args, fixture_kwargs, ex)
+                for _ in range(n):
+                    ex = tuple(s.draw(rnd) for s in strategies)
+                    _run_example(fn, fixture_args, fixture_kwargs, ex)
+
+            def _run_example(fn, fargs, fkwargs, ex):
+                try:
+                    fn(*fargs, *ex, **fkwargs)
+                except Exception:
+                    print(f"mini-hypothesis falsifying example: {ex!r}")
+                    raise
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper._mini_settings = getattr(fn, "_mini_settings", {})
+            return wrapper
+
+        return deco
+
+    def _settings(**kwargs):
+        def deco(fn):
+            fn._mini_settings = dict(kwargs)
+            return fn
+
+        return deco
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.floats = _floats
+    _st.lists = _lists
+    _st.sampled_from = _sampled_from
+    _st.booleans = _booleans
+    _st.just = _just
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    _hyp.__mini__ = True
+
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

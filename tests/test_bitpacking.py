@@ -1,0 +1,167 @@
+"""Edge-width and format-stability tests for the vectorized bit plumbing:
+``pack_uint_stream`` / ``unpack_uint_stream`` (word-parallel packer),
+``compress_int_stream`` round-trips, GD ``_extract_bits``/``_deposit_bits``
+(mask-run decomposition), and the explicit bfloat16 branch of ``_as_words``.
+"""
+import numpy as np
+import pytest
+
+from repro.compression.bitplane import (
+    _as_words,
+    compress_int_stream,
+    decompress_int_stream,
+    pack_uint_stream,
+    unpack_uint_stream,
+)
+from repro.compression.gd import _deposit_bits, _extract_bits
+
+
+def _reference_pack(vals: np.ndarray, width: int) -> bytes:
+    """The seed's (n, width)-uint8 reference layout, kept as the format
+    oracle for the word-parallel implementation."""
+    if width == 0 or vals.size == 0:
+        return b""
+    bits = np.zeros((vals.size, width), np.uint8)
+    for b in range(width):
+        bits[:, b] = (vals >> np.uint64(width - 1 - b)) & np.uint64(1)
+    return np.packbits(bits.reshape(-1)).tobytes()
+
+
+# ---------------------------------------------------------------------------
+# pack/unpack edge widths
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("width", [1, 2, 7, 8, 9, 31, 32, 33, 63, 64])
+@pytest.mark.parametrize("n", [1, 2, 63, 64, 65, 257])
+def test_pack_unpack_roundtrip_edges(width, n):
+    rng = np.random.default_rng(width * 1000 + n)
+    hi = (1 << width) - 1
+    vals = rng.integers(0, hi, n, dtype=np.uint64) if width < 64 else (
+        rng.integers(0, 1 << 63, n, dtype=np.uint64) * 2 + (n % 2)
+    )
+    vals[0] = 0
+    vals[-1] = np.uint64(hi)
+    buf = pack_uint_stream(vals, width)
+    assert len(buf) == -(-n * width // 8)
+    assert buf == _reference_pack(vals, width)
+    assert np.array_equal(unpack_uint_stream(buf, width, n), vals)
+
+
+def test_pack_width_zero_and_empty():
+    assert pack_uint_stream(np.zeros(5, np.uint64), 0) == b""
+    assert pack_uint_stream(np.zeros(0, np.uint64), 17) == b""
+    assert np.array_equal(unpack_uint_stream(b"", 0, 5), np.zeros(5, np.uint64))
+    assert unpack_uint_stream(b"", 13, 0).size == 0
+
+
+def test_unpack_truncated_buffer_raises():
+    # a lossless codec must fail loudly on corrupt/truncated streams,
+    # never silently decode the missing tail as zeros
+    vals = np.arange(100, dtype=np.uint64)
+    buf = pack_uint_stream(vals, 37)
+    with pytest.raises(ValueError):
+        unpack_uint_stream(buf[:-1], 37, 100)
+    with pytest.raises(ValueError):
+        unpack_uint_stream(b"", 37, 100)
+
+
+def test_pack_width_out_of_range():
+    with pytest.raises(ValueError):
+        pack_uint_stream(np.ones(3, np.uint64), 65)
+    with pytest.raises(ValueError):
+        unpack_uint_stream(b"\x00" * 8, -1, 3)
+
+
+def test_pack_values_masked_to_width():
+    # values wider than bit_width must be truncated, not corrupt neighbours
+    vals = np.asarray([0xFFFF_FFFF_FFFF_FFFF, 0x1, 0xABC], np.uint64)
+    buf = pack_uint_stream(vals, 4)
+    back = unpack_uint_stream(buf, 4, 3)
+    assert np.array_equal(back, vals & np.uint64(0xF))
+
+
+# ---------------------------------------------------------------------------
+# compress_int_stream
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "vals",
+    [
+        np.zeros(0, np.int64),
+        np.asarray([0], np.int64),
+        np.asarray([-5], np.int64),
+        np.full(1000, 42, np.int64),
+        np.arange(-500, 500, dtype=np.int64),
+        np.asarray([np.iinfo(np.int64).min // 2, 0,
+                    np.iinfo(np.int64).max // 2], np.int64),
+        np.asarray([np.iinfo(np.int64).min, -1, 0,
+                    np.iinfo(np.int64).max], np.int64),
+    ],
+    ids=["empty", "single", "single-negative", "constant", "ramp",
+         "extremes", "full-span"],
+)
+def test_compress_int_stream_roundtrip(vals):
+    buf = compress_int_stream(vals)
+    back = decompress_int_stream(buf, vals.size)
+    assert np.array_equal(back, vals)
+
+
+def test_compress_int_stream_random_roundtrip():
+    rng = np.random.default_rng(3)
+    for width in (1, 16, 40, 62):
+        vals = rng.integers(-(1 << width), 1 << width, 4097).astype(np.int64)
+        assert np.array_equal(
+            decompress_int_stream(compress_int_stream(vals), vals.size), vals
+        )
+
+
+# ---------------------------------------------------------------------------
+# GD extract/deposit (mask-run decomposition)
+# ---------------------------------------------------------------------------
+
+def _reference_extract(words, mask):
+    w = words.astype(np.uint64)
+    out = np.zeros_like(w)
+    pos = np.uint64(0)
+    for b in range(64):
+        if (mask >> b) & 1:
+            out |= ((w >> np.uint64(b)) & np.uint64(1)) << pos
+            pos += np.uint64(1)
+    return out
+
+
+@pytest.mark.parametrize(
+    "mask",
+    [0, (1 << 64) - 1, 0xFFFF_FFFF_0000_0000, 0xAAAA_AAAA_AAAA_AAAA,
+     0x8000_0000_0000_0001, 0x00F0_0F00_FF00_0FF0],
+    ids=["empty", "full", "top32", "alternating", "ends", "runs"],
+)
+def test_extract_deposit_bits_vs_reference(mask):
+    rng = np.random.default_rng(9)
+    w = rng.integers(0, 1 << 63, 999, dtype=np.uint64)
+    ext = _extract_bits(w, mask)
+    assert np.array_equal(ext, _reference_extract(w, mask))
+    # deposit(extract(w)) restores exactly the masked bits
+    assert np.array_equal(_deposit_bits(ext, mask), w & np.uint64(mask))
+
+
+# ---------------------------------------------------------------------------
+# _as_words bfloat16 branch
+# ---------------------------------------------------------------------------
+
+def test_as_words_bfloat16():
+    ml_dtypes = pytest.importorskip("ml_dtypes")
+    x = np.asarray([1.0, -2.5, 0.0, 3.14], dtype=ml_dtypes.bfloat16)
+    w = _as_words(x)
+    assert w.dtype == np.uint16
+    assert w.shape == (4,)
+    # sign bit of -2.5 set; +1.0 is 0x3F80 in bfloat16
+    assert w[0] == 0x3F80
+    assert w[1] >> 15 == 1
+
+
+def test_as_words_float_and_uint_passthrough():
+    f = np.asarray([1.0, 2.0], np.float32)
+    assert _as_words(f).dtype == np.uint32
+    u = np.asarray([3, 4], np.uint64)
+    assert np.array_equal(_as_words(u), u)
