@@ -82,6 +82,43 @@ def bench_transforms(rows: list, n_elems: int = 100_000):
     _record(rows, "pipeline_decode_10k", us, "bitwise-lossless", x10.nbytes)
 
 
+def bench_container(rows: list, n_elems: int = 100_000):
+    """Container serialization overhead (write = select+transform+serialize,
+    read = parse+verify+inverse): the cost of the I/O layer itself is now a
+    tracked quantity in BENCH_codec.json."""
+    import tempfile
+
+    from repro.container import ContainerReader, ContainerWriter
+
+    tag = f"{n_elems // 1000}k"
+    x = gas_turbine_emissions(n_elems)
+    chunk = 32_768
+
+    with tempfile.TemporaryDirectory() as d:
+        path = f"{d}/bench.fpc"
+
+        def write():
+            with ContainerWriter(path, dtype=np.float64) as w:
+                for i in range(0, x.size, chunk):
+                    w.append(x[i : i + chunk])
+
+        us = _timeit(write)
+        with ContainerReader(path) as r:
+            ratio = r.ratio()
+        _record(rows, f"container_write_{tag}", us,
+                f"ratio={ratio:.3f} chunk={chunk // 1024}k", x.nbytes)
+
+        def read():
+            with ContainerReader(path) as r:
+                return r.read_all()
+
+        back = read()
+        assert np.array_equal(back.view(np.uint64), x.view(np.uint64))
+        us = _timeit(read)
+        _record(rows, f"container_read_{tag}", us, "bitwise-lossless",
+                x.nbytes)
+
+
 def bench_gd(rows: list):
     x = gas_turbine_emissions(10_000)
     us = _timeit(lambda: gd_compress(x))
@@ -161,10 +198,12 @@ def run(rows: list, smoke: bool = False):
     BENCH_codec.smoke.json so the tracked 100k baseline stays intact."""
     if smoke:
         bench_transforms(rows, n_elems=10_000)
+        bench_container(rows, n_elems=10_000)
         bench_gd(rows)
         bench_kernels(rows)
     else:
         bench_transforms(rows)
+        bench_container(rows)
         bench_gd(rows)
         bench_kernels(rows)
         bench_checkpoint(rows)

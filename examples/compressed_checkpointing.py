@@ -2,6 +2,10 @@
 checkpoint (params + Adam moments) losslessly, restore it bitwise, report
 per-array transform choices and ratios.
 
+Every array is stored as a versioned binary container (`arr_<i>.fpc`,
+docs/format.md): self-describing, checksummed, pickle-free — safe to decode
+in a serving path without trusting the producer.
+
   PYTHONPATH=src python examples/compressed_checkpointing.py
 """
 import json
@@ -12,6 +16,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint import restore_tree, save_tree
+from repro.container import ContainerReader
 from repro.configs import get_config
 from repro.models import build_model
 from repro.optim import adamw_init
@@ -34,6 +39,11 @@ with tempfile.TemporaryDirectory() as d:
         for m in rec["methods"]:
             methods[m] = methods.get(m, 0) + 1
     print(f"transform choices across array chunks: {methods}")
+
+    # peek inside one container: per-chunk records, random-access index
+    with ContainerReader(Path(d) / "ck" / "arr_0.fpc") as r:
+        print(f"arr_0.fpc: backend={r.backend} spec={r.spec_name or 'raw'} "
+              f"chunks={r.nchunks} ratio={r.ratio():.3f}")
 
     back, _ = restore_tree(Path(d) / "ck")
     for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):

@@ -1,6 +1,10 @@
 """Compressed float shard store with random access — the paper's GD
 random-access property in the data pipeline.
 
+Each shard is a single versioned binary container (`<name>.fpc`,
+docs/format.md): the chunk index in its footer makes `read_chunk(i)` an
+O(1) seek + one record decode, with no pickle anywhere on the read path.
+
   PYTHONPATH=src python examples/compressed_data_pipeline.py
 """
 import tempfile

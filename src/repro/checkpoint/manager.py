@@ -5,32 +5,35 @@ Properties (the large-scale-runnability contract):
  * **Lossless**: every array round-trips bitwise (core.pipeline verifies
    each chunk's inverse before shipping) — restore continues the exact
    training trajectory.  f32/f64 arrays go through the paper's transforms;
-   bf16 via the BF16 FloatSpec; int arrays via zlib.
+   bf16 via the BF16 FloatSpec; int arrays as raw container chunks.
  * **Atomic**: writes go to `step_<n>.tmp/` then `os.replace` to
    `step_<n>/` — a preemption mid-write never corrupts the latest
    checkpoint (two-phase commit).
  * **Elastic**: arrays are stored as full LOGICAL arrays (host-gathered),
    independent of the device mesh — restore onto any mesh shape, then
    reshard with the target sharding rules (tested in test_checkpoint.py).
- * **Self-describing**: manifest.json carries the pytree structure, step,
-   data-pipeline cursor and compression stats (per-array method + ratio).
+ * **Self-describing, no unsafe deserialization**: each array is a versioned binary
+   container (`arr_<i>.fpc`, see docs/format.md) decoded with zero trust
+   in the producer; manifest.json carries the pytree *structure* as plain
+   JSON plus step, data-pipeline cursor and compression stats.
+
+Checkpoints written by the pre-container (legacy object-blob) layout are not
+readable — pre-1.0 format break, recorded in CHANGES.md.
 """
 from __future__ import annotations
 
 import json
 import os
-import pickle
 import shutil
-import zlib
 from pathlib import Path
 
 import jax
 import numpy as np
 
-from ..core import pipeline
-from ..core.float_bits import BF16, F32, F64
+from ..container import ContainerError, ContainerReader, ContainerWriter
+from ..container.format import dtype_name as _dtype_name, resolve_dtype
 
-_FLOAT_SPECS = {"float64": F64, "float32": F32, "bfloat16": BF16}
+MANIFEST_FORMAT = 2
 CHUNK = 1 << 18
 
 # §Perf C: checkpoint arrays are weights/moments — the iterative transforms
@@ -45,65 +48,72 @@ _CKPT_CANDIDATES = (
 )
 
 
-def _encode_array(x: np.ndarray, method: str = "auto") -> dict:
-    """-> {kind, blobs, meta}; floats via the paper codec, ints via zlib."""
-    dt = x.dtype
-    if dt == np.dtype("V2"):  # bfloat16 viewed
-        dt = jax.numpy.bfloat16.dtype
-    name = str(dt)
-    if name in _FLOAT_SPECS:
-        flat = np.asarray(x).reshape(-1)
-        blobs = []
-        methods = []
-        # §Perf C: pick the transform ONCE per array (sampled), reuse for
-        # every chunk; per-chunk fallback to identity on domain failure.
-        per_chunk_method = method
-        per_chunk_params = None
-        if method == "auto" and flat.size > 16384:
-            probe = pipeline.encode(
-                flat[:: max(1, flat.size // 8192)][:8192],
-                method="auto", spec=_FLOAT_SPECS[name],
-                candidates=_CKPT_CANDIDATES,
+# ---------------------------------------------------------------------------
+# pytree structure <-> JSON (replaces the opaque serialized treedef)
+# ---------------------------------------------------------------------------
+
+def _tree_spec(tree, leaves: list) -> dict:
+    """Flatten ``tree`` into ``leaves`` and return a JSON-serializable
+    structure spec.  Dicts are walked in sorted-key order (jax convention);
+    supported nodes are dict/list/tuple/None — anything else is a leaf."""
+    if tree is None:
+        return {"t": "none"}
+    if isinstance(tree, dict):
+        try:
+            keys = sorted(tree)
+        except TypeError:
+            raise ContainerError(
+                "checkpoint tree dict keys must be sortable and "
+                "JSON-serializable (str/int)"
             )
-            per_chunk_method = probe.method
-            per_chunk_params = probe.params
-        for i in range(0, max(flat.size, 1), CHUNK):
-            seg = flat[i : i + CHUNK]
-            if seg.size == 0:
-                break
-            try:
-                if per_chunk_method == "auto":
-                    enc = pipeline.encode(
-                        seg, method="auto", spec=_FLOAT_SPECS[name],
-                        candidates=_CKPT_CANDIDATES,
-                    )
-                else:
-                    enc = pipeline.encode(
-                        seg, method=per_chunk_method, params=per_chunk_params,
-                        spec=_FLOAT_SPECS[name],
-                    )
-            except Exception:
-                enc = pipeline.encode(
-                    seg, method="identity", spec=_FLOAT_SPECS[name]
+        for k in keys:
+            if not isinstance(k, (str, int)):
+                raise ContainerError(
+                    f"checkpoint tree dict key {k!r} is not JSON-serializable"
                 )
-            blobs.append(zlib.compress(pickle.dumps(enc), 6))
-            methods.append(enc.method)
-        return {"kind": "float", "blobs": blobs, "methods": methods}
-    raw = np.ascontiguousarray(x).tobytes()
-    return {"kind": "raw", "blobs": [zlib.compress(raw, 6)], "methods": ["zlib"]}
+        return {"t": "dict", "k": list(keys),
+                "c": [_tree_spec(tree[k], leaves) for k in keys]}
+    if isinstance(tree, tuple) and hasattr(tree, "_fields"):
+        # a NamedTuple would silently come back as a plain tuple (losing
+        # attribute access) — reject at save time instead of corrupting
+        # the restore path
+        raise ContainerError(
+            f"checkpoint tree contains a NamedTuple node "
+            f"({type(tree).__name__}); convert it to a dict before saving "
+            f"(e.g. state._asdict()) — JSON tree specs cannot reconstruct "
+            "NamedTuple classes"
+        )
+    if isinstance(tree, (list, tuple)):
+        return {"t": "list" if isinstance(tree, list) else "tuple",
+                "c": [_tree_spec(v, leaves) for v in tree]}
+    leaves.append(tree)
+    return {"t": "leaf"}
 
 
-def _decode_array(rec: dict, shape, dtype) -> np.ndarray:
-    if rec["kind"] == "float":
-        parts = [
-            pipeline.decode(pickle.loads(zlib.decompress(b))).reshape(-1)
-            for b in rec["blobs"]
-        ]
-        flat = np.concatenate(parts) if parts else np.zeros(0, dtype)
-        return flat.reshape(shape)
-    raw = zlib.decompress(rec["blobs"][0])
-    return np.frombuffer(raw, dtype).reshape(shape).copy()
+def _build_tree(spec: dict, leaves_it):
+    t = spec.get("t")
+    if t == "none":
+        return None
+    if t == "dict":
+        return {k: _build_tree(c, leaves_it)
+                for k, c in zip(spec["k"], spec["c"])}
+    if t in ("list", "tuple"):
+        seq = [_build_tree(c, leaves_it) for c in spec["c"]]
+        return seq if t == "list" else tuple(seq)
+    if t == "leaf":
+        try:
+            return next(leaves_it)
+        except StopIteration:
+            raise ContainerError(
+                "corrupt checkpoint manifest: tree spec claims more leaves "
+                "than there are stored arrays"
+            ) from None
+    raise ContainerError(f"unknown checkpoint tree node type {t!r}")
 
+
+# ---------------------------------------------------------------------------
+# save / restore
+# ---------------------------------------------------------------------------
 
 def save_tree(tree, directory: str | Path, extra: dict | None = None,
               method: str = "auto") -> dict:
@@ -114,30 +124,41 @@ def save_tree(tree, directory: str | Path, extra: dict | None = None,
         shutil.rmtree(tmp)
     tmp.mkdir(parents=True)
 
-    leaves, treedef = jax.tree.flatten(tree)
-    stats, index = [], []
+    leaves: list = []
+    tree_spec = _tree_spec(tree, leaves)
+    index = []
     for i, leaf in enumerate(leaves):
         arr = np.asarray(jax.device_get(leaf))
-        rec = _encode_array(arr, method)
-        blob_path = tmp / f"arr_{i}.bin"
-        with open(blob_path, "wb") as f:
-            for b in rec["blobs"]:
-                f.write(len(b).to_bytes(8, "little"))
-                f.write(b)
-        comp = sum(len(b) for b in rec["blobs"])
+        if arr.dtype.kind == "O":
+            # e.g. a jax-registered custom pytree node (flax struct, optax
+            # state) that _tree_spec treated as a leaf: its object array
+            # would serialize as raw pointers — unrestorable garbage.
+            # Fail at save time, not at restore time.
+            raise ContainerError(
+                f"checkpoint leaf {i} ({type(leaf).__name__}) is not an "
+                "array; custom pytree node types are not supported — "
+                "convert the tree to dict/list/tuple of arrays before saving"
+            )
+        kw = {"candidates": _CKPT_CANDIDATES} if method == "auto" else {}
+        with ContainerWriter(tmp / f"arr_{i}.fpc", dtype=arr.dtype,
+                             method=method, **kw) as w:
+            flat = arr.reshape(-1)
+            for s in range(0, flat.size, CHUNK):
+                w.append(flat[s : s + CHUNK])
+            chunks = w.chunks
+            kind = w.kind
         index.append({
             "shape": list(arr.shape),
-            "dtype": str(arr.dtype) if arr.dtype != jax.numpy.bfloat16.dtype
-            else "bfloat16",
-            "kind": rec["kind"],
-            "nblobs": len(rec["blobs"]),
+            "dtype": _dtype_name(arr.dtype),
+            "kind": kind,
+            "nchunks": len(chunks),
             "raw": int(arr.nbytes),
-            "comp": comp,
-            "methods": rec["methods"],
+            "comp": sum(c["comp"] for c in chunks),
+            "methods": [c["method"] for c in chunks],
         })
-        stats.append((arr.nbytes, comp))
     manifest = {
-        "treedef": pickle.dumps(treedef).hex(),
+        "format": MANIFEST_FORMAT,
+        "tree": tree_spec,
         "arrays": index,
         "extra": extra or {},
     }
@@ -145,8 +166,8 @@ def save_tree(tree, directory: str | Path, extra: dict | None = None,
     if directory.exists():
         shutil.rmtree(directory)
     os.replace(tmp, directory)  # atomic commit
-    raw = sum(r for r, _ in stats)
-    comp = sum(c for _, c in stats)
+    raw = sum(r["raw"] for r in index)
+    comp = sum(r["comp"] for r in index)
     return {"raw_bytes": raw, "comp_bytes": comp,
             "ratio": comp / max(raw, 1)}
 
@@ -155,24 +176,27 @@ def restore_tree(directory: str | Path):
     """-> (pytree of np arrays, extra dict). Mesh-independent."""
     directory = Path(directory)
     manifest = json.loads((directory / "manifest.json").read_text())
-    treedef = pickle.loads(bytes.fromhex(manifest["treedef"]))
+    if manifest.get("format") != MANIFEST_FORMAT:
+        raise ContainerError(
+            f"checkpoint at {directory} uses manifest format "
+            f"{manifest.get('format')!r}; this reader supports "
+            f"{MANIFEST_FORMAT} (pre-container legacy checkpoints are not "
+            "readable — re-save with the current code)"
+        )
     leaves = []
     for i, rec in enumerate(manifest["arrays"]):
-        blobs = []
-        with open(directory / f"arr_{i}.bin", "rb") as f:
-            for _ in range(rec["nblobs"]):
-                ln = int.from_bytes(f.read(8), "little")
-                blobs.append(f.read(ln))
-        dtype = (
-            jax.numpy.bfloat16.dtype if rec["dtype"] == "bfloat16"
-            else np.dtype(rec["dtype"])
+        with ContainerReader(directory / f"arr_{i}.fpc") as r:
+            flat = r.read_all()
+        dt = resolve_dtype(rec["dtype"])
+        leaves.append(flat.astype(dt, copy=False).reshape(rec["shape"]))
+    it = iter(leaves)
+    tree = _build_tree(manifest["tree"], it)
+    if next(it, None) is not None:
+        raise ContainerError(
+            "corrupt checkpoint manifest: tree spec claims fewer leaves "
+            "than there are stored arrays"
         )
-        leaves.append(
-            _decode_array(
-                {"kind": rec["kind"], "blobs": blobs}, rec["shape"], dtype
-            )
-        )
-    return jax.tree.unflatten(treedef, leaves), manifest["extra"]
+    return tree, manifest["extra"]
 
 
 class CheckpointManager:
@@ -191,11 +215,20 @@ class CheckpointManager:
         self._gc()
         return stats
 
+    def _steps(self) -> list[int]:
+        """Committed step numbers only — `.tmp` staging dirs (including
+        stale ones from crashed saves) never parse as steps."""
+        out = []
+        for p in self.root.glob("step_*"):
+            if not p.is_dir() or p.name.endswith(".tmp"):
+                continue
+            tail = p.name.split("_", 1)[1]
+            if tail.isdigit():
+                out.append(int(tail))
+        return sorted(out)
+
     def latest_step(self) -> int | None:
-        steps = sorted(
-            int(p.name.split("_")[1]) for p in self.root.glob("step_*")
-            if p.is_dir() and not p.name.endswith(".tmp")
-        )
+        steps = self._steps()
         return steps[-1] if steps else None
 
     def restore_latest(self):
@@ -205,9 +238,10 @@ class CheckpointManager:
         return restore_tree(self.root / f"step_{s:08d}")
 
     def _gc(self):
-        steps = sorted(
-            int(p.name.split("_")[1]) for p in self.root.glob("step_*")
-            if p.is_dir()
-        )
-        for s in steps[: -self.keep]:
+        # sweep orphaned .tmp staging dirs (crashed saves); the save that
+        # just committed has already os.replace'd its own tmp dir away
+        for p in self.root.glob("step_*.tmp"):
+            if p.is_dir():
+                shutil.rmtree(p, ignore_errors=True)
+        for s in self._steps()[: -self.keep]:
             shutil.rmtree(self.root / f"step_{s:08d}", ignore_errors=True)

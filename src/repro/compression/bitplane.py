@@ -127,19 +127,24 @@ def compress_int_stream(vals: np.ndarray) -> bytes:
 
 
 def decompress_int_stream(buf: bytes, n: int) -> np.ndarray:
-    import zlib
+    from ..container.backends import zlib_decompress_capped
+
+    def _capped(z: bytes, width: int) -> bytes:
+        # n and width bound the packed size exactly, so decompression of an
+        # untrusted stream can never balloon past what the caller expects
+        return zlib_decompress_capped(z, -(-n * width // 8))
 
     tag = buf[0]
     if tag == 0:
         return np.zeros(0, np.int64)
     if tag == 1:
         lo = np.frombuffer(buf[1:9], np.int64)[0]
-        width = np.frombuffer(buf[9:10], np.int8)[0]
-        dense = unpack_uint_stream(zlib.decompress(buf[10:]), int(width), n)
+        width = int(np.frombuffer(buf[9:10], np.int8)[0])
+        dense = unpack_uint_stream(_capped(buf[10:], width), width, n)
         # wrap-exact inverse of the uint64 offset encoding
         return (dense + np.uint64(int(lo) % (1 << 64))).view(np.int64)
-    width = np.frombuffer(buf[1:2], np.int8)[0]
-    zz = unpack_uint_stream(zlib.decompress(buf[2:]), int(width), n).astype(np.int64)
+    width = int(np.frombuffer(buf[1:2], np.int8)[0])
+    zz = unpack_uint_stream(_capped(buf[2:], width), width, n).astype(np.int64)
     d = (zz >> 1) ^ -(zz & 1)
     return np.cumsum(d).astype(np.int64)
 

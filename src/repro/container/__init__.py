@@ -1,0 +1,42 @@
+"""Versioned binary container for encoded float data — the codec's I/O layer.
+
+Replaces the three independent ad-hoc object-blob formats that lived in
+``checkpoint/manager.py``, ``data/shard_store.py`` and the examples with one
+self-describing, checksummed, streaming format (spec: ``docs/format.md``):
+
+* :class:`ContainerWriter` / :class:`ContainerReader` — streaming append /
+  O(1) random-access chunk reads,
+* :func:`serialize_chunk` / :func:`deserialize_chunk` — one
+  :class:`~repro.core.pipeline.Encoded` <-> one checksummed record,
+* :func:`dumps` / :func:`loads` — single-chunk in-memory containers,
+* backend-compressor registry (zlib always; zstd when importable;
+  :func:`register_backend` for anything else).
+
+Decoding executes no producer-controlled code: every field is parsed
+explicitly, lengths are bounds-checked, records are CRC-verified, and
+unknown versions/methods/backends fail loudly.
+"""
+from .backends import (  # noqa: F401
+    Backend,
+    ContainerError,
+    available_backends,
+    get_backend,
+    register_backend,
+)
+from .format import (  # noqa: F401
+    ChecksumError,
+    ContainerFormatError,
+    MAGIC,
+    METHOD_IDS,
+    RAW_METHOD_ID,
+    VERSION,
+    deserialize_chunk,
+    serialize_chunk,
+    serialize_raw_chunk,
+)
+from .io import (  # noqa: F401
+    ContainerReader,
+    ContainerWriter,
+    dumps,
+    loads,
+)

@@ -1,0 +1,102 @@
+"""Pluggable backend-compressor registry for the container format.
+
+A backend is the *byte-stream* compressor applied to each chunk's payload
+(transformed float words) and is named in the container header, so decode
+never guesses: zlib is always registered (stdlib), zstd registers itself
+when ``zstandard`` is importable.  Additional backends (e.g. an accelerator
+entropy coder) plug in via :func:`register_backend` without touching the
+format layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Callable
+
+
+class ContainerError(ValueError):
+    """Base error for the container subsystem."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    name: str
+    compress: Callable[[bytes], bytes]
+    decompress: Callable[[bytes], bytes]
+    # capped decompress(buf, max_out) -> at most max_out+1 bytes, never
+    # allocating more: the container always knows the expected payload size
+    # up front, so a crafted record can't expand into a decompression bomb.
+    # Plugins without one fall back to plain decompress (post-hoc checked).
+    decompress_capped: Callable[[bytes, int], bytes] | None = None
+
+
+_REGISTRY: dict[str, Backend] = {}
+
+
+def register_backend(name: str, compress, decompress,
+                     decompress_capped=None) -> None:
+    """Register (or replace) a byte-stream compressor under ``name``.
+
+    ``name`` must be short ASCII (it is stored verbatim in the header).
+    """
+    if not name or len(name) > 32 or not name.isascii():
+        raise ContainerError(f"backend name must be short ASCII, got {name!r}")
+    _REGISTRY[name] = Backend(name, compress, decompress, decompress_capped)
+
+
+def get_backend(name: str) -> Backend:
+    b = _REGISTRY.get(name)
+    if b is None:
+        raise ContainerError(
+            f"compressor backend {name!r} is not available "
+            f"(registered: {', '.join(sorted(_REGISTRY)) or 'none'}); "
+            "decoding this container requires the library it names"
+        )
+    return b
+
+
+def available_backends() -> tuple[str, ...]:
+    """Registered backend names, default first (deterministic order)."""
+    names = sorted(_REGISTRY)
+    if "zlib" in names:  # the always-available default leads
+        names.remove("zlib")
+        names.insert(0, "zlib")
+    return tuple(names)
+
+
+def zlib_decompress_capped(buf: bytes, max_out: int) -> bytes:
+    """DEFLATE-decompress at most ``max_out + 1`` bytes (the +1 lets the
+    caller detect an oversized stream by length mismatch); further output
+    stays compressed inside the decompressor and is simply dropped.
+
+    The cap is clamped to >= 1: ``max_length=0`` means *unlimited* to
+    zlib, which would reopen the bomb this helper exists to close."""
+    d = zlib.decompressobj()
+    return d.decompress(buf, max(int(max_out), 0) + 1)
+
+
+register_backend("zlib", lambda b: zlib.compress(b, 6), zlib.decompress,
+                 zlib_decompress_capped)
+
+try:  # optional: zstd when the wheel is present (never a hard dependency)
+    import zstandard as _zstd
+except Exception:  # pragma: no cover - environment-dependent
+    _zstd = None
+
+if _zstd is not None:
+    def _zstd_decompress_capped(buf: bytes, max_out: int) -> bytes:
+        # zstandard raises ZstdError beyond max_output_size; normalize to
+        # the registry's error surface so readers report it as corruption
+        try:
+            return _zstd.ZstdDecompressor().decompress(
+                buf, max_output_size=max_out + 1
+            )
+        except _zstd.ZstdError as e:
+            raise ContainerError(f"zstd payload rejected: {e}")
+
+    register_backend(
+        "zstd",
+        lambda b: _zstd.ZstdCompressor(level=10).compress(b),
+        lambda b: _zstd.ZstdDecompressor().decompress(b),
+        _zstd_decompress_capped,
+    )

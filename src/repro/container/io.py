@@ -1,0 +1,348 @@
+"""Streaming container I/O: ``ContainerWriter.append`` / ``ContainerReader``.
+
+The writer is the *streaming* face of the codec: transform selection runs
+once (on a strided sample of the first sizeable chunk) and every subsequent
+chunk goes straight through :func:`repro.core.pipeline.apply_transform` —
+no whole-array materialization, no re-selection per chunk.  A chunk whose
+data rejects the picked transform (domain failure, failed round-trip) falls
+back to identity: a container write can never fail on data shape grounds,
+and never ships a non-round-tripping chunk (pipeline contract).
+
+The reader is random-access: the footer index gives O(1) seek to any chunk
+record, so ``read_chunk(i)`` touches only that record's bytes.
+"""
+from __future__ import annotations
+
+import io as _io
+import struct
+import zlib
+from pathlib import Path
+
+import numpy as np
+
+from ..core import pipeline, transforms as T
+from ..core.float_bits import BF16, F32, F64
+from . import format as F
+from .backends import ContainerError, get_backend
+
+_FLOAT_SPECS = {"float64": F64, "float32": F32, "bfloat16": BF16}
+_SPEC_NAMES = {"float64": "f64", "float32": "f32", "bfloat16": "bf16"}
+
+# selection probe: arrays at or below the threshold run full auto per chunk
+# (cheap at that size); larger streams are probed once on a strided sample
+# and every chunk reuses the picked transform (the §Perf C policy that used
+# to live, duplicated, in checkpoint/manager.py and data/shard_store.py).
+PROBE_ELEMS = 8192
+PROBE_THRESHOLD = 16384
+
+
+class ContainerWriter:
+    """Append-only streaming writer for one container (one logical array).
+
+    ``dtype`` decides the path: f64/f32/bf16 chunks go through the paper
+    codec (method selection + transform + verify); any other dtype is
+    stored as backend-compressed raw bytes (``RAW`` records).
+    """
+
+    def __init__(
+        self,
+        path_or_file,
+        dtype,
+        backend: str = "zlib",
+        method: str = "auto",
+        params: dict | None = None,
+        candidates=None,
+        user_meta: dict | None = None,
+        probe_elems: int = PROBE_ELEMS,
+        probe_threshold: int = PROBE_THRESHOLD,
+        fallback_identity: bool = True,
+    ):
+        self._dtype_name = F.dtype_name(dtype)
+        self._dtype = F.resolve_dtype(self._dtype_name)
+        self._spec = _FLOAT_SPECS.get(self._dtype_name)
+        self._spec_name = _SPEC_NAMES.get(self._dtype_name, "")
+        self._backend = get_backend(backend)
+        self._method = method
+        self._params = params
+        self._candidates = (
+            candidates if candidates is not None else pipeline.DEFAULT_CANDIDATES
+        )
+        self._user_meta = dict(user_meta or {})
+        self._probe_elems = probe_elems
+        self._probe_threshold = probe_threshold
+        self._fallback_identity = fallback_identity
+        self._picked: tuple[str, dict | None] | None = None
+        self._entries: list[dict] = []
+        self._chunks: list[dict] = []
+        self._closed = False
+
+        if hasattr(path_or_file, "write"):
+            self._f = path_or_file
+            self._owns = False
+        else:
+            self._f = open(Path(path_or_file), "wb")
+            self._owns = True
+        self._pos = 0
+        self._write(F.encode_header(self._spec_name, self._dtype_name,
+                                    self._backend.name))
+
+    # -- byte plumbing ------------------------------------------------------
+
+    def _write(self, b: bytes) -> None:
+        self._f.write(b)
+        self._pos += len(b)
+
+    def _write_record(self, rec: bytes, n: int, method: str) -> dict:
+        off = self._pos
+        self._write(struct.pack("<Q", len(rec)))
+        self._write(rec)
+        method_id = F.RAW_METHOD_ID if method == "raw" else F.METHOD_IDS[method]
+        self._entries.append(
+            {"offset": off, "length": len(rec), "n": n, "method_id": method_id}
+        )
+        info = {
+            "method": method,
+            "raw": int(n * self._dtype.itemsize),
+            "comp": len(rec),
+        }
+        self._chunks.append(info)
+        return info
+
+    # -- encoding policy ----------------------------------------------------
+
+    def _encode(self, flat: np.ndarray) -> pipeline.Encoded:
+        name, prm = self._method, self._params
+        if name == "auto":
+            if self._picked is None and flat.size > self._probe_threshold:
+                # ceil-strided so the probe spans the whole chunk (same
+                # sampling the selection engine itself uses)
+                sample = pipeline._strided(flat, self._probe_elems)
+                try:
+                    self._picked = pipeline.select_method(
+                        sample, candidates=self._candidates, spec=self._spec
+                    )
+                except T.TransformError:
+                    self._picked = ("auto", None)
+            name, prm = self._picked or ("auto", None)
+        try:
+            if name == "auto":
+                return pipeline.encode(
+                    flat, method="auto", candidates=self._candidates,
+                    spec=self._spec,
+                )
+            return pipeline.apply_transform(flat, name, prm, spec=self._spec)
+        except Exception:
+            if not self._fallback_identity:
+                raise
+            # picked transform rejected this chunk's data: lossless fallback
+            return pipeline.apply_transform(flat, "identity", spec=self._spec)
+
+    # -- public API ---------------------------------------------------------
+
+    def append(self, chunk) -> dict:
+        """Encode + serialize one chunk; returns {method, raw, comp}."""
+        if self._closed:
+            raise ContainerError("writer is closed")
+        arr = np.asarray(chunk)
+        if F.dtype_name(arr.dtype) != self._dtype_name:
+            raise ContainerError(
+                f"chunk dtype {arr.dtype} does not match container dtype "
+                f"{self._dtype_name!r} — a container holds one dtype"
+            )
+        if self._spec is None:
+            rec = F.serialize_raw_chunk(arr, self._backend)
+            return self._write_record(rec, arr.size, "raw")
+        enc = self._encode(arr)
+        rec = F.serialize_chunk(enc, self._backend)
+        return self._write_record(rec, arr.size, enc.method)
+
+    def append_encoded(self, enc: pipeline.Encoded) -> dict:
+        """Serialize an already-encoded chunk (must match the container spec)."""
+        if self._closed:
+            raise ContainerError("writer is closed")
+        if self._spec is None or enc.spec_name != self._spec_name:
+            raise ContainerError(
+                f"Encoded spec {enc.spec_name!r} does not match container "
+                f"spec {self._spec_name!r}"
+            )
+        rec = F.serialize_chunk(enc, self._backend)
+        return self._write_record(rec, enc.n, enc.method)
+
+    @property
+    def chunks(self) -> list[dict]:
+        return list(self._chunks)
+
+    @property
+    def kind(self) -> str:
+        """'float' (codec path) or 'raw' (byte-compressed path)."""
+        return "raw" if self._spec is None else "float"
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        index = F.encode_index(self._entries, self._user_meta)
+        index_off = self._pos
+        self._write(index)
+        self._write(F.encode_footer(index_off, zlib.crc32(index),
+                                    len(self._entries)))
+        self._f.flush()
+        if self._owns:
+            self._f.close()
+        self._closed = True
+
+    def abort(self) -> None:
+        """Stop WITHOUT finalizing: no index/footer is written, so readers
+        reject the partial file loudly instead of parsing a half-written
+        container as complete."""
+        if self._closed:
+            return
+        if self._owns:
+            self._f.close()
+        self._closed = True
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        if exc_type is not None:
+            self.abort()
+        else:
+            self.close()
+
+
+class ContainerReader:
+    """Random-access reader over a finalized container."""
+
+    def __init__(self, path_or_buf):
+        if isinstance(path_or_buf, (bytes, bytearray, memoryview)):
+            self._f = _io.BytesIO(bytes(path_or_buf))
+            self._owns = True
+        elif hasattr(path_or_buf, "read"):
+            self._f = path_or_buf
+            self._owns = False
+        else:
+            self._f = open(Path(path_or_buf), "rb")
+            self._owns = True
+
+        self._f.seek(0, 2)
+        size = self._f.tell()
+        if size < F.FOOTER_SIZE + len(F.MAGIC):
+            raise F.ContainerFormatError("file too small to be a container")
+        self._f.seek(size - F.FOOTER_SIZE)
+        index_off, index_crc, nchunks = F.decode_footer(
+            self._f.read(F.FOOTER_SIZE)
+        )
+        if index_off >= size - F.FOOTER_SIZE:
+            raise F.ContainerFormatError("container index offset out of range")
+
+        self._f.seek(0)
+        head = self._f.read(min(size, 1024))
+        cur = F._Cursor(head)
+        self.header = F.decode_header(cur)
+        self.spec_name = self.header["spec_name"]
+        self.backend = self.header["backend"]
+        self.dtype = F.resolve_dtype(self.header["dtype"])
+        self._be = get_backend(self.backend)
+
+        self._f.seek(index_off)
+        index_buf = self._f.read(size - F.FOOTER_SIZE - index_off)
+        if zlib.crc32(index_buf) != index_crc:
+            raise F.ChecksumError("container index checksum mismatch")
+        self._entries, self.user_meta = F.decode_index(index_buf, nchunks)
+
+    @property
+    def nchunks(self) -> int:
+        return len(self._entries)
+
+    def __len__(self) -> int:
+        return self.nchunks
+
+    @property
+    def n(self) -> int:
+        """Total elements across all chunks."""
+        return sum(e["n"] for e in self._entries)
+
+    def chunk_info(self, i: int) -> dict:
+        e = self._entries[i]
+        method = ("raw" if e["method_id"] == F.RAW_METHOD_ID
+                  else F.METHOD_NAMES[e["method_id"]])
+        return {
+            "method": method,
+            "n": e["n"],
+            "raw": e["n"] * self.dtype.itemsize,
+            "comp": e["length"],
+        }
+
+    def ratio(self) -> float:
+        raw = sum(e["n"] for e in self._entries) * self.dtype.itemsize
+        comp = sum(e["length"] for e in self._entries)
+        return comp / max(raw, 1)
+
+    def _record(self, i: int) -> bytes:
+        e = self._entries[i]
+        self._f.seek(e["offset"])
+        (ln,) = struct.unpack("<Q", self._f.read(8))
+        if ln != e["length"]:
+            raise F.ContainerFormatError(
+                f"chunk {i}: record length {ln} disagrees with index "
+                f"{e['length']}"
+            )
+        rec = self._f.read(ln)
+        if len(rec) != ln:
+            raise F.ContainerFormatError(f"chunk {i}: truncated record")
+        return rec
+
+    def read_encoded(self, i: int) -> pipeline.Encoded:
+        obj = F.deserialize_chunk(
+            self._record(i), self._be, spec_name=self.spec_name or None,
+            dtype=self.dtype,
+        )
+        if not isinstance(obj, pipeline.Encoded):
+            raise ContainerError(f"chunk {i} is a raw chunk, not an Encoded")
+        return obj
+
+    def read_chunk(self, i: int) -> np.ndarray:
+        """Decode one chunk to its original values (random access)."""
+        obj = F.deserialize_chunk(
+            self._record(i), self._be, spec_name=self.spec_name or None,
+            dtype=self.dtype,
+        )
+        if isinstance(obj, pipeline.Encoded):
+            return pipeline.decode(obj)
+        return obj
+
+    def read_all(self) -> np.ndarray:
+        """Decode every chunk, concatenated flat (streaming, chunk by chunk)."""
+        parts = [self.read_chunk(i).reshape(-1) for i in range(self.nchunks)]
+        if not parts:
+            return np.zeros(0, self.dtype)
+        return np.concatenate(parts)
+
+    def close(self) -> None:
+        if self._owns:
+            self._f.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def dumps(enc: pipeline.Encoded, backend: str = "zlib") -> bytes:
+    """One Encoded -> a complete single-chunk container (in memory)."""
+    bio = _io.BytesIO()
+    w = ContainerWriter(
+        bio, dtype=F.spec_dtype_name(enc.spec_name), backend=backend
+    )
+    w.append_encoded(enc)
+    w.close()
+    return bio.getvalue()
+
+
+def loads(buf: bytes) -> pipeline.Encoded:
+    """Inverse of :func:`dumps`."""
+    r = ContainerReader(buf)
+    if r.nchunks != 1:
+        raise ContainerError(f"expected a single-chunk container, got {r.nchunks}")
+    return r.read_encoded(0)

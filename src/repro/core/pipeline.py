@@ -113,7 +113,12 @@ def _pack_z(bits: np.ndarray) -> bytes:
 
 
 def _unpack_z(z: bytes, n: int) -> np.ndarray:
-    return np.unpackbits(np.frombuffer(zlib.decompress(z), np.uint8))[:n]
+    # capped decompress: n is known, so a corrupt/hostile stream can never
+    # expand past the ceil(n/8) packbits bytes it claims to hold
+    from ..container.backends import zlib_decompress_capped
+
+    raw = zlib_decompress_capped(z, -(-n // 8))
+    return np.unpackbits(np.frombuffer(raw, np.uint8))[:n]
 
 
 def _slice_meta(meta, s: int, e: int):
@@ -147,6 +152,201 @@ def _apply_and_verify(name, p, X, spec, chunk_elems=DEFAULT_CHUNK_ELEMS):
     if not bool(ok_np):
         return None
     return vals_np, meta
+
+
+# ---------------------------------------------------------------------------
+# phase 0: normalization (shared by select_method / apply_transform / encode)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Prepared:
+    """Normalized view of one input array: passthrough mask split off,
+    active values moved to one binade, significands materialized.  The
+    shared state behind the layered primitives (`select_method`,
+    `apply_transform`, `encode`)."""
+
+    xf: np.ndarray              # flat input values
+    shape: tuple
+    spec: FloatSpec
+    finite: np.ndarray          # bool[n]: element goes through the transform
+    pass_mask: np.ndarray       # ~finite
+    active: object              # jax array of transformable values
+    X: object | None            # int64 significands (None when no active)
+    exps_np: np.ndarray
+    signs_np: np.ndarray
+    _packed: list = dataclasses.field(default_factory=list)
+
+    @property
+    def n(self) -> int:
+        return int(self.xf.shape[0])
+
+    @property
+    def n_active(self) -> int:
+        return int(self.exps_np.shape[0])
+
+    def pack_common(self):
+        """Normalization metadata (exponents/signs/passthrough), packed
+        lazily and once — only a shipping non-identity candidate pays."""
+        if not self._packed:
+            from ..compression.bitplane import compress_int_stream
+
+            self._packed.append((
+                compress_int_stream(self.exps_np),
+                _pack_z(self.signs_np),
+                _pack_z(self.pass_mask),
+            ))
+        return self._packed[0]
+
+    def identity_encoded(self) -> Encoded:
+        return Encoded(
+            method="identity", params={}, data=self.xf.copy().reshape(self.shape),
+            meta=None, exponents_z=b"", signs_z=b"", passthrough_z=b"",
+            spec_name=self.spec.name, n=self.n, n_active=0,
+        )
+
+    def finish(self, name, p, vals_np, meta) -> Encoded:
+        data = self.xf.copy()
+        data[self.finite] = vals_np
+        exponents_z, signs_z, passthrough_z = self.pack_common()
+        return Encoded(
+            method=name, params=p, data=data.reshape(self.shape), meta=meta,
+            exponents_z=exponents_z, signs_z=signs_z,
+            passthrough_z=passthrough_z, spec_name=self.spec.name, n=self.n,
+            n_active=self.n_active,
+        )
+
+
+def _prepare(x, spec: FloatSpec | None = None) -> _Prepared:
+    x = jnp.asarray(x)
+    spec = spec or spec_for(x)
+    xf = np.asarray(x).reshape(-1)
+    finite = np.isfinite(xf.astype(np.float64)) & (xf != 0)
+    pass_mask = ~finite
+    active = jnp.asarray(xf[finite])
+    if active.shape[0]:
+        y01, exps, signs = normalize_to_binade(active, spec)
+        X = significand_int(y01, 0, spec)
+        exps_np = np.asarray(exps, np.int64)
+        signs_np = np.asarray(signs, np.uint8)
+    else:
+        X = None
+        exps_np = np.zeros(0, np.int64)
+        signs_np = np.zeros(0, np.uint8)
+    return _Prepared(
+        xf=xf, shape=np.shape(x), spec=spec, finite=finite,
+        pass_mask=pass_mask, active=active, X=X, exps_np=exps_np,
+        signs_np=signs_np,
+    )
+
+
+# ---------------------------------------------------------------------------
+# layered primitives
+# ---------------------------------------------------------------------------
+
+def apply_transform(
+    x,
+    method: str,
+    params: dict | None = None,
+    spec: FloatSpec | None = None,
+    chunk_elems: int = DEFAULT_CHUNK_ELEMS,
+) -> Encoded:
+    """Apply one explicit transform with chunked round-trip verification.
+
+    The phase-2 primitive: no selection, no fallback — a transform that
+    rejects the data or fails verification raises
+    :class:`~repro.core.transforms.TransformError` (callers choose the
+    fallback policy; streaming writers fall back to identity per chunk)."""
+    prep = _prepare(x, spec)
+    if method == "identity" or prep.n_active == 0:
+        # all-passthrough data has nothing to transform: identity is the
+        # only faithful encoding regardless of the requested method
+        return prep.identity_encoded()
+    applied = _apply_and_verify(method, params or {}, prep.X, prep.spec,
+                                chunk_elems)
+    if applied is None:
+        raise T.TransformError(
+            f"transform {method!r} failed round-trip verification"
+        )
+    return prep.finish(method, params or {}, *applied)
+
+
+def select_method(
+    x,
+    candidates=DEFAULT_CANDIDATES,
+    size_fn: Callable[[bytes], int] | None = None,
+    spec: FloatSpec | None = None,
+    sample_elems: int = DEFAULT_SAMPLE_ELEMS,
+    top_k: int = DEFAULT_TOP_K,
+) -> tuple[str, dict]:
+    """Phase-1 primitive: rank candidates on ``x`` (typically a strided
+    sample) and return the winning ``(method, params)`` without applying it
+    to anything.  Streaming writers call this once, then stream every chunk
+    through :func:`apply_transform`."""
+    prep = _prepare(x, spec)
+    if prep.n_active == 0:
+        return "identity", {}
+    ranked, _first = _rank_candidates(prep, candidates, size_fn,
+                                      sample_elems, top_k)
+    if not ranked:
+        raise T.TransformError("no feasible transform candidate")
+    name, p = ranked[0]
+    return name, dict(p)
+
+
+def _rank_candidates(prep: _Prepared, candidates, size_fn, sample_elems,
+                     top_k):
+    """Shared selection core -> (ranked candidate list, first_applied).
+
+    ``size_fn is None`` selects the fused analytic engine (zlib finalists);
+    a custom ``size_fn`` keeps the seed's exact compressor-matched
+    semantics (every candidate scored on the full array, pre-verified)."""
+    analytic = size_fn is None
+    has_identity = any(n_ == "identity" for n_, _ in candidates)
+    if analytic:
+        size_fn = lambda b: len(zlib.compress(b, 6))
+        from ..compression.bitplane import compress_int_stream
+
+        # selection-time estimate of the shared normalization metadata:
+        # pack a strided sample of exponents/signs and scale up (it is a
+        # constant added to every non-identity candidate, so only its
+        # magnitude vs identity matters, not its exact value)
+        exps_s = _strided(prep.exps_np, sample_elems)
+        sc = prep.exps_np.shape[0] / max(exps_s.shape[0], 1)
+        pass_s = _strided(prep.pass_mask, sample_elems)
+        common_est = (
+            len(compress_int_stream(exps_s))
+            + len(_pack_z(_strided(prep.signs_np, sample_elems)))
+        ) * sc + len(_pack_z(pass_s)) * (
+            prep.pass_mask.shape[0] / max(pass_s.shape[0], 1)
+        )
+        ranked = _select_analytic(
+            prep.xf, prep.finite, prep.X, prep.spec, candidates, size_fn,
+            common_est, sample_elems, top_k, has_identity,
+        )
+        return ranked, None
+    exponents_z, signs_z, passthrough_z = prep.pack_common()
+    common_meta = len(exponents_z) + len(signs_z) + len(passthrough_z)
+    return _select_exact(
+        prep.xf, prep.finite, prep.X, prep.spec, candidates, size_fn,
+        common_meta,
+    )
+
+
+def serialize_chunk(enc: Encoded, backend: str = "zlib") -> bytes:
+    """Serialize one :class:`Encoded` as a checksummed binary record of the
+    container format (``docs/format.md``) — explicit fields, no pickle."""
+    from ..container import format as _fmt
+
+    return _fmt.serialize_chunk(enc, backend)
+
+
+def deserialize_chunk(buf: bytes, spec_name: str, backend: str = "zlib") -> Encoded:
+    """Inverse of :func:`serialize_chunk` (spec/backend travel in the
+    container header, so standalone records need them passed back in)."""
+    from ..container import format as _fmt
+
+    enc = _fmt.deserialize_chunk(buf, backend, spec_name=spec_name)
+    return enc
 
 
 def encode(
@@ -200,122 +400,43 @@ def _encode_full(
     top_k: int = DEFAULT_TOP_K,
     chunk_elems: int = DEFAULT_CHUNK_ELEMS,
 ) -> Encoded:
-    x = jnp.asarray(x)
-    spec = spec or spec_for(x)
-    xf = np.asarray(x).reshape(-1)
-    n = xf.shape[0]
-
-    finite = np.isfinite(xf.astype(np.float64)) & (xf != 0)
-    pass_mask = ~finite
-    active = jnp.asarray(xf[finite])
-
-    if active.shape[0] == 0:
-        # nothing to transform: pure passthrough
-        return Encoded(
-            method="identity", params={}, data=xf.reshape(np.shape(x)), meta=None,
-            exponents_z=b"", signs_z=b"",
-            passthrough_z=b"", spec_name=spec.name, n=n, n_active=0,
-        )
-
-    from ..compression.bitplane import compress_int_stream
-
-    y01, exps, signs = normalize_to_binade(active, spec)
-    X = significand_int(y01, 0, spec)
-
-    exps_np = np.asarray(exps, np.int64)
-    signs_np = np.asarray(signs, np.uint8)
-
-    # full-array normalization metadata is only packed when a non-identity
-    # candidate actually ships (§Perf: zlib'ing 100k exponents before
-    # selection cost more than the whole analytic selection phase)
-    _packed_common: list = []
-
-    def _pack_common():
-        if not _packed_common:
-            _packed_common.append((
-                compress_int_stream(exps_np),
-                _pack_z(signs_np),
-                _pack_z(pass_mask),
-            ))
-        return _packed_common[0]
-
-    analytic = size_fn is None and method == "auto"
-    if size_fn is None:
-        size_fn = lambda b: len(zlib.compress(b, 6))
-
-    def _identity_encoded() -> Encoded:
-        return Encoded(
-            method="identity", params={}, data=xf.copy().reshape(np.shape(x)),
-            meta=None, exponents_z=b"", signs_z=b"", passthrough_z=b"",
-            spec_name=spec.name, n=n, n_active=0,
-        )
-
-    def _finish(name, p, vals_np, meta) -> Encoded:
-        data = xf.copy()
-        data[finite] = vals_np
-        exponents_z, signs_z, passthrough_z = _pack_common()
-        return Encoded(
-            method=name, params=p, data=data.reshape(np.shape(x)), meta=meta,
-            exponents_z=exponents_z, signs_z=signs_z,
-            passthrough_z=passthrough_z, spec_name=spec.name, n=n,
-            n_active=int(active.shape[0]),
-        )
-
     if method != "auto":
-        if method == "identity":
-            return _identity_encoded()
-        applied = _apply_and_verify(method, params or {}, X, spec, chunk_elems)
-        if applied is None:
-            raise T.TransformError("no transform candidate round-tripped")
-        return _finish(method, params or {}, *applied)
+        # explicit method: phase 2 only (identity and all-passthrough
+        # inputs short-circuit inside apply_transform)
+        return apply_transform(x, method, params, spec, chunk_elems)
+
+    prep = _prepare(x, spec)
+    if prep.n_active == 0:
+        # nothing to transform: pure passthrough
+        return prep.identity_encoded()
 
     # identity participates (as scored baseline and terminal fallback) only
     # when the caller's candidate list includes it — a restricted candidate
-    # list must never ship an unlisted method (seed semantics)
+    # list must never ship an unlisted method (seed semantics).  A custom
+    # size_fn keeps the seed's exact compressor-matched selection.
     has_identity = any(n_ == "identity" for n_, _ in candidates)
-    first_applied = None
-    if analytic:
-        # selection-time estimate of the shared normalization metadata:
-        # pack a strided sample of exponents/signs and scale up (it is a
-        # constant added to every non-identity candidate, so only its
-        # magnitude vs identity matters, not its exact value)
-        exps_s = _strided(exps_np, sample_elems)
-        sc = exps_np.shape[0] / max(exps_s.shape[0], 1)
-        pass_s = _strided(pass_mask, sample_elems)
-        common_est = (
-            len(compress_int_stream(exps_s))
-            + len(_pack_z(_strided(signs_np, sample_elems)))
-        ) * sc + len(_pack_z(pass_s)) * (
-            pass_mask.shape[0] / max(pass_s.shape[0], 1)
-        )
-        ranked = _select_analytic(
-            xf, finite, X, spec, candidates, size_fn, common_est,
-            sample_elems, top_k, has_identity,
-        )
-    else:
-        exponents_z, signs_z, passthrough_z = _pack_common()
-        common_meta = len(exponents_z) + len(signs_z) + len(passthrough_z)
-        ranked, first_applied = _select_exact(
-            xf, finite, X, spec, candidates, size_fn, common_meta
-        )
+    ranked, first_applied = _rank_candidates(
+        prep, candidates, size_fn, sample_elems, top_k
+    )
 
     # phase 2: apply + verify finalists in rank order
     for i, (name, p) in enumerate(ranked):
         if name == "identity":
-            return _identity_encoded()
+            return prep.identity_encoded()
         if i == 0 and first_applied is not None:
             # exact path: _select_exact already round-trip verified the
             # winner on the full array — don't redo the transform
-            return _finish(name, p, *first_applied)
+            return prep.finish(name, p, *first_applied)
         try:
-            applied = _apply_and_verify(name, p, X, spec, chunk_elems)
+            applied = _apply_and_verify(name, p, prep.X, prep.spec,
+                                        chunk_elems)
         except T.TransformError:
             continue
         if applied is None:
             continue  # failed round-trip: rejected, never shipped
-        return _finish(name, p, *applied)
+        return prep.finish(name, p, *applied)
     if has_identity:
-        return _identity_encoded()
+        return prep.identity_encoded()
     raise T.TransformError("no transform candidate round-tripped")
 
 

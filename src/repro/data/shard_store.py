@@ -1,73 +1,80 @@
 """Compressed float shard store — the paper's codec as the data-at-rest layer.
 
 Float feature shards (sensor time series, embeddings, eval features) are
-stored transformed (best-of-4, §3) + GD/zlib-compressed, in fixed-size
-CHUNKS so reads are random-access at chunk granularity (the GD property the
-paper highlights [6,12]).  Bitwise-lossless by construction (encode verifies
-round-trip before shipping — core.pipeline contract).
+stored as ONE versioned binary container per shard (``<name>.fpc``, format:
+docs/format.md): transformed (best-of-4, §3) + backend-compressed, in
+fixed-size CHUNKS so reads are random-access at chunk granularity (the GD
+property the paper highlights [6,12]).  Bitwise-lossless by construction
+(encode verifies round-trip before shipping — core.pipeline contract), and
+free of unsafe deserialization: safe to decode from untrusted producers.
 
-Format per shard file (directory of chunks + manifest.json):
-  chunk_<i>.bin : pickled Encoded (transform meta + transformed words zlib'd)
-  manifest.json : dtype, shape, chunk size, per-chunk raw/comp sizes
+Shape/dtype/chunking travel in the container's user-meta JSON — no sidecar
+manifest files.  Shards written by the pre-container (object-blob)
+layout are not readable (pre-1.0 format break, recorded in CHANGES.md).
 """
 from __future__ import annotations
 
-import json
-import pickle
-import zlib
 from pathlib import Path
 
 import numpy as np
 
-from ..core import pipeline
+from ..container import ContainerReader, ContainerWriter
+from ..container.format import resolve_dtype
 
 
 class ShardStore:
-    def __init__(self, root: str | Path):
+    def __init__(self, root: str | Path, backend: str = "zlib"):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
+        self.backend = backend
+
+    def _path(self, name: str) -> Path:
+        return self.root / f"{name}.fpc"
 
     def write(self, name: str, x: np.ndarray, chunk: int = 65536,
               method: str = "auto") -> dict:
-        d = self.root / name
-        d.mkdir(parents=True, exist_ok=True)
         flat = np.ascontiguousarray(x).reshape(-1)
         nchunks = max(1, -(-flat.size // chunk))
-        sizes = []
-        for i in range(nchunks):
-            seg = flat[i * chunk : (i + 1) * chunk]
-            enc = pipeline.encode(seg, method=method)
-            blob = zlib.compress(pickle.dumps(enc), 6)
-            (d / f"chunk_{i}.bin").write_bytes(blob)
-            sizes.append({"raw": int(seg.nbytes), "comp": len(blob),
-                          "method": enc.method})
-        manifest = {
+        with ContainerWriter(
+            self._path(name),
+            dtype=x.dtype,
+            backend=self.backend,
+            method=method,
+            user_meta={
+                "dtype": str(x.dtype),
+                "shape": list(x.shape),
+                "chunk": chunk,
+            },
+        ) as w:
+            for i in range(nchunks):
+                w.append(flat[i * chunk : (i + 1) * chunk])
+            sizes = w.chunks
+        return {
             "dtype": str(x.dtype),
             "shape": list(x.shape),
             "chunk": chunk,
             "chunks": sizes,
         }
-        (d / "manifest.json").write_text(json.dumps(manifest))
-        return manifest
+
+    def manifest(self, name: str) -> dict:
+        with ContainerReader(self._path(name)) as r:
+            m = dict(r.user_meta)
+            m["chunks"] = [r.chunk_info(i) for i in range(r.nchunks)]
+        return m
 
     def read(self, name: str) -> np.ndarray:
-        d = self.root / name
-        manifest = json.loads((d / "manifest.json").read_text())
-        parts = []
-        for i in range(len(manifest["chunks"])):
-            enc = pickle.loads(zlib.decompress((d / f"chunk_{i}.bin").read_bytes()))
-            parts.append(pipeline.decode(enc).reshape(-1))
-        flat = np.concatenate(parts) if parts else np.zeros(0)
-        return flat.reshape(manifest["shape"]).astype(np.dtype(manifest["dtype"]))
+        with ContainerReader(self._path(name)) as r:
+            flat = r.read_all()
+            meta = r.user_meta
+        return flat.reshape(meta["shape"]).astype(
+            resolve_dtype(meta["dtype"]), copy=False
+        )
 
     def read_chunk(self, name: str, i: int) -> np.ndarray:
         """Random access: decode one chunk without touching the rest."""
-        d = self.root / name
-        enc = pickle.loads(zlib.decompress((d / f"chunk_{i}.bin").read_bytes()))
-        return pipeline.decode(enc).reshape(-1)
+        with ContainerReader(self._path(name)) as r:
+            return r.read_chunk(i).reshape(-1)
 
     def ratio(self, name: str) -> float:
-        m = json.loads((self.root / name / "manifest.json").read_text())
-        raw = sum(c["raw"] for c in m["chunks"])
-        comp = sum(c["comp"] for c in m["chunks"])
-        return comp / max(raw, 1)
+        with ContainerReader(self._path(name)) as r:
+            return r.ratio()

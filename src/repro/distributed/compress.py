@@ -44,11 +44,10 @@ def decompress_bucket(enc) -> np.ndarray:
 
 
 def bucket_report(x: np.ndarray) -> dict:
-    import pickle
-    import zlib
+    from ..container import dumps
 
     enc = compress_bucket(x)
-    blob = zlib.compress(pickle.dumps(enc), 6)
+    blob = dumps(enc)  # full self-describing container, wire-safe (no pickle)
     raw = np.asarray(x, np.float32).nbytes
     return {
         "method": enc.method,

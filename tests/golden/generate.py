@@ -1,0 +1,121 @@
+"""Golden container fixtures: one checked-in reference blob per transform
+family (plus raw / passthrough cases).
+
+The *data* is derived from a fixed LCG (no numpy RNG dependency, so the
+bytes regenerate identically on any platform), the *method* is forced, and
+the fixture is committed.  `tests/test_container_golden.py` decodes the
+committed bytes with the current code and compares bitwise against the
+regenerated source — so any change that breaks decode compatibility of the
+on-disk format fails CI instead of silently orphaning old containers.
+
+Regenerate (ONLY on an intentional, version-bumped format change):
+
+  PYTHONPATH=src python -m tests.golden.generate
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+import numpy as np
+
+GOLDEN_DIR = Path(__file__).resolve().parent
+
+
+def _lcg_u64(n: int, seed: int) -> np.ndarray:
+    """Deterministic 64-bit LCG stream (Knuth MMIX constants)."""
+    a = np.uint64(6364136223846793005)
+    c = np.uint64(1442695040888963407)
+    out = np.empty(n, np.uint64)
+    s = np.uint64(seed)
+    with np.errstate(over="ignore"):
+        for i in range(n):
+            s = s * a + c
+            out[i] = s
+    return out
+
+
+def data_f64(n: int = 2500, seed: int = 1) -> np.ndarray:
+    bits = _lcg_u64(n, seed) >> np.uint64(64 - 20)       # 20 mantissa bits
+    return 1.0 + bits.astype(np.float64) / (1 << 52) * (1 << 30)
+
+
+def data_f64_passthrough(n: int = 512, seed: int = 2) -> np.ndarray:
+    x = data_f64(n, seed)
+    x[::17] = 0.0
+    x[5] = np.nan
+    x[6] = np.inf
+    x[7] = -np.inf
+    x[8::31] *= -1.0
+    return x
+
+
+def data_f32(n: int = 2500, seed: int = 3) -> np.ndarray:
+    bits = _lcg_u64(n, seed) >> np.uint64(64 - 12)
+    return (1.0 + bits.astype(np.float64) / (1 << 23) * (1 << 10)).astype(
+        np.float32
+    )
+
+
+def data_bf16(n: int = 1024, seed: int = 4):
+    import ml_dtypes
+
+    bits = _lcg_u64(n, seed) >> np.uint64(64 - 4)
+    return (1.0 + bits.astype(np.float64) / (1 << 7) * (1 << 2)).astype(
+        ml_dtypes.bfloat16
+    )
+
+
+def data_i32(n: int = 2048, seed: int = 5) -> np.ndarray:
+    return (_lcg_u64(n, seed) >> np.uint64(40)).astype(np.int32)
+
+
+# name -> (data_fn, dtype tag, method, params, n_fixture_chunks)
+CASES = {
+    "identity_passthrough_f64": (data_f64_passthrough, "float64",
+                                 "identity", {}, 2),
+    "compact_bins_f64": (data_f64, "float64", "compact_bins",
+                         {"n_bins": 4}, 2),
+    "multiply_shift_f64": (data_f64, "float64", "multiply_shift",
+                           {"D": 4}, 2),
+    "shift_separate_f64": (data_f64, "float64", "shift_separate",
+                           {"D": 2}, 2),
+    "shift_save_even_f64": (data_f64, "float64", "shift_save_even",
+                            {"D": 8}, 2),
+    "shift_save_even_f32": (data_f32, "float32", "shift_save_even",
+                            {"D": 8}, 2),
+    "multiply_shift_bf16": (data_bf16, "bfloat16", "multiply_shift",
+                            {"D": 3}, 2),
+    "raw_i32": (data_i32, "int32", None, None, 2),
+}
+
+
+def fixture_path(name: str) -> Path:
+    return GOLDEN_DIR / f"{name}.fpc"
+
+
+def write_fixture(name: str) -> Path:
+    from repro.container import ContainerWriter
+
+    data_fn, dtype, method, params, nchunks = CASES[name]
+    x = data_fn()
+    flat = x.reshape(-1)
+    step = -(-flat.size // nchunks)
+    kw = {}
+    if method is not None:
+        kw = {"method": method, "params": params, "fallback_identity": False}
+    path = fixture_path(name)
+    with ContainerWriter(path, dtype=x.dtype,
+                         user_meta={"case": name}, **kw) as w:
+        for s in range(0, flat.size, step):
+            w.append(flat[s : s + step])
+    return path
+
+
+def main():
+    for name in CASES:
+        p = write_fixture(name)
+        print(f"wrote {p.name}: {p.stat().st_size} bytes")
+
+
+if __name__ == "__main__":
+    main()

@@ -82,6 +82,63 @@ def test_atomic_no_partial_state(tmp_path):
     assert len(jax.tree.leaves(got)) == len(jax.tree.leaves(tree))
 
 
+def test_gc_ignores_and_sweeps_stale_tmp(tmp_path):
+    """Regression: `_gc` used to crash with ValueError on a stale
+    `step_*.tmp` staging dir left by a crashed save; now it filters them
+    from step parsing AND sweeps the orphans."""
+    mgr = CheckpointManager(tmp_path, keep=2)
+    stale = Path(tmp_path) / "step_00000042.tmp"
+    stale.mkdir()
+    (stale / "garbage").write_text("crash")
+    for s in [10, 20, 30]:
+        mgr.save(s, mk_tree(s))
+    assert mgr.latest_step() == 30
+    assert not stale.exists(), "orphaned .tmp dir must be swept"
+    kept = sorted(p.name for p in Path(tmp_path).glob("step_*"))
+    assert kept == ["step_00000020", "step_00000030"]
+
+
+def test_unsupported_tree_nodes_fail_at_save(tmp_path):
+    """NamedTuples and custom pytree nodes must be rejected when SAVING —
+    never written as a silently-unrestorable checkpoint."""
+    import collections
+
+    Pt = collections.namedtuple("Pt", ["m", "v"])
+    with pytest.raises(Exception, match="NamedTuple"):
+        save_tree({"opt": Pt(np.ones(4), np.ones(4))}, tmp_path / "nt")
+
+    class Weird:
+        pass
+
+    with pytest.raises(Exception, match="not an array"):
+        save_tree({"x": Weird()}, tmp_path / "obj")
+
+
+def test_manifest_leaf_count_mismatch_is_loud(tmp_path):
+    """A manifest whose tree spec disagrees with the stored array count
+    must raise an explanatory error, not StopIteration / silence."""
+    save_tree({"a": np.ones(4)}, tmp_path / "ck")
+    mpath = tmp_path / "ck" / "manifest.json"
+    m = json.loads(mpath.read_text())
+    m["tree"] = {"t": "dict", "k": ["a", "b"],
+                 "c": [{"t": "leaf"}, {"t": "leaf"}]}
+    mpath.write_text(json.dumps(m))
+    with pytest.raises(Exception, match="more leaves"):
+        restore_tree(tmp_path / "ck")
+
+
+def test_pre_container_checkpoint_rejected(tmp_path):
+    """Old pickle-blob checkpoints are not readable (pre-1.0 format break):
+    the failure must be a loud, explanatory error — never an unpickle."""
+    d = tmp_path / "ck"
+    d.mkdir()
+    (d / "manifest.json").write_text(
+        json.dumps({"treedef": "deadbeef", "arrays": [], "extra": {}})
+    )
+    with pytest.raises(Exception, match="pre-container"):
+        restore_tree(d)
+
+
 def test_manager_retention_and_resume(tmp_path):
     mgr = CheckpointManager(tmp_path, keep=2)
     for s in [10, 20, 30]:

@@ -1,0 +1,103 @@
+"""Golden-bytes compatibility: the checked-in container fixtures (one per
+transform family, tests/golden/*.fpc) must keep decoding bitwise-identically
+on every future revision — this is the decode-compatibility contract of the
+on-disk format (docs/format.md).  A failure here means the format changed
+without a version bump + migration story.
+
+CI runs this module as the dedicated `container-compat` step.
+"""
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.container import (
+    ChecksumError,
+    ContainerFormatError,
+    ContainerReader,
+)
+from tests.golden.generate import CASES, fixture_path
+
+
+def _words(x):
+    x = np.asarray(x)
+    if x.dtype.kind in "iu":
+        return x
+    if x.dtype.kind == "V" or str(x.dtype) == "bfloat16":
+        return x.view(np.uint16)
+    return x.view({8: np.uint64, 4: np.uint32, 2: np.uint16}[x.dtype.itemsize])
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_golden_fixture_decodes_bitwise(name):
+    path = fixture_path(name)
+    assert path.exists(), (
+        f"missing golden fixture {path.name} — regenerate ONLY on an "
+        "intentional format change: PYTHONPATH=src python -m tests.golden.generate"
+    )
+    data_fn, dtype, method, params, nchunks = CASES[name]
+    want = data_fn().reshape(-1)
+    with ContainerReader(path) as r:
+        assert r.user_meta == {"case": name}
+        assert r.nchunks == nchunks
+        if method is not None:
+            # the committed bytes really exercise this family (no silent
+            # identity fallback hiding a broken transform serializer)
+            assert [r.chunk_info(i)["method"] for i in range(r.nchunks)] == (
+                [method] * nchunks
+            )
+        got = r.read_all()
+    assert str(got.dtype) == dtype
+    assert np.array_equal(_words(got), _words(want)), (
+        f"golden fixture {name} no longer decodes to its source data"
+    )
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_golden_fixture_encoded_fields(name):
+    """Transform fixtures also round-trip at the Encoded level (method,
+    params and per-family metadata deserialize to usable values)."""
+    data_fn, dtype, method, params, nchunks = CASES[name]
+    if method is None:
+        pytest.skip("raw fixture has no Encoded records")
+    with ContainerReader(fixture_path(name)) as r:
+        enc = r.read_encoded(0)
+    assert enc.method == method
+    assert enc.params == params
+    assert enc.metadata_bytes() >= 0
+
+
+# ---------------------------------------------------------------------------
+# the format's trust-nothing error paths, exercised on committed bytes
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def golden_bytes():
+    return fixture_path("shift_save_even_f64").read_bytes()
+
+
+def test_golden_corrupt_header(golden_bytes):
+    with pytest.raises(ContainerFormatError, match="magic"):
+        ContainerReader(b"ZZZZ" + golden_bytes[4:])
+    with pytest.raises(ContainerFormatError, match="version"):
+        ContainerReader(golden_bytes[:4] + b"\x63\x00" + golden_bytes[6:])
+
+
+def test_golden_truncated(golden_bytes):
+    for cut in (len(golden_bytes) - 7, len(golden_bytes) // 2, 12):
+        with pytest.raises(ContainerFormatError):
+            ContainerReader(golden_bytes[:cut])
+
+
+def test_golden_bad_checksum(golden_bytes):
+    r = ContainerReader(golden_bytes)
+    off = r._entries[0]["offset"] + 8 + 40  # byte inside chunk 0's record
+    bad = bytearray(golden_bytes)
+    bad[off] ^= 0x80
+    r2 = ContainerReader(bytes(bad))
+    with pytest.raises(ChecksumError):
+        r2.read_chunk(0)
+    # chunk 1 is untouched and still decodes
+    want = CASES["shift_save_even_f64"][0]().reshape(-1)
+    got = r2.read_chunk(1).reshape(-1)
+    assert np.array_equal(got.view(np.uint64), want[-got.size:].view(np.uint64))
