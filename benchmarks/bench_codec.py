@@ -114,9 +114,69 @@ def bench_container(rows: list, n_elems: int = 100_000):
 
         back = read()
         assert np.array_equal(back.view(np.uint64), x.view(np.uint64))
-        us = _timeit(read)
+        # ms-scale rows get many reps: 3 reps = a ~10 ms window, pure
+        # noise-roulette on a shared host; 25 reps averages over ~100 ms
+        us = _timeit(read, n=25)
         _record(rows, f"container_read_{tag}", us, "bitwise-lossless",
                 x.nbytes)
+
+        # parallel decode over a finer-chunked stream (more records ->
+        # more decompress/inverse overlap for the decode pool; chunk size
+        # is clamped to [2048, 16384] elements — n/4 in between — so the
+        # stream is always multi-chunk without making records so small the
+        # pool's per-span sync cost dominates; docs/perf.md has the
+        # measured crossover)
+        from repro.container import default_decode_workers
+
+        chunk_par = max(2048, min(16384, n_elems // 4))
+        path_par = f"{d}/bench_par.fpc"
+        with ContainerWriter(path_par, dtype=np.float64) as w:
+            for i in range(0, x.size, chunk_par):
+                w.append(x[i : i + chunk_par])
+
+        def read_parallel():
+            with ContainerReader(path_par) as r:
+                return r.read_all(parallel=True)
+
+        with ContainerReader(path_par) as r:
+            nchunks_par = r.nchunks
+            serial_par_stream = r.read_all()
+        back = read_parallel()
+        assert np.array_equal(back.view(np.uint64), x.view(np.uint64))
+        assert np.array_equal(back.view(np.uint64),
+                              serial_par_stream.view(np.uint64))
+        us = _timeit(read_parallel, n=25)
+        _record(
+            rows, f"container_read_parallel_{tag}", us,
+            f"bitwise==serial chunks={nchunks_par} "
+            f"workers={default_decode_workers()}",
+            x.nbytes,
+        )
+
+
+def bench_shard_prefetch(rows: list, n_elems: int = 100_000):
+    """Prefetched shard iteration vs lazy iteration: the data-path consumer
+    of the prefetching reader (`ShardStore.iter_chunks`)."""
+    import tempfile
+
+    from repro.data.shard_store import ShardStore
+
+    x = gas_turbine_emissions(n_elems)
+    with tempfile.TemporaryDirectory() as d:
+        store = ShardStore(d)
+        store.write("bench", x, chunk=max(2048, min(16384, n_elems // 4)))
+
+        def drain(prefetch):
+            return np.concatenate(
+                list(store.iter_chunks("bench", prefetch=prefetch))
+            )
+
+        back = drain(4)
+        assert np.array_equal(back.view(np.uint64), x.view(np.uint64))
+        us_lazy = _timeit(lambda: drain(0), n=25)
+        us = _timeit(lambda: drain(4), n=25)
+        _record(rows, "shard_iter_prefetch", us,
+                f"prefetch=4 lazy={us_lazy / 1e3:.1f}ms", x.nbytes)
 
 
 def bench_gd(rows: list):
@@ -199,11 +259,13 @@ def run(rows: list, smoke: bool = False):
     if smoke:
         bench_transforms(rows, n_elems=10_000)
         bench_container(rows, n_elems=10_000)
+        bench_shard_prefetch(rows, n_elems=10_000)
         bench_gd(rows)
         bench_kernels(rows)
     else:
         bench_transforms(rows)
         bench_container(rows)
+        bench_shard_prefetch(rows)
         bench_gd(rows)
         bench_kernels(rows)
         bench_checkpoint(rows)

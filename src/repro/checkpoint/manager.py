@@ -32,6 +32,7 @@ import numpy as np
 
 from ..container import ContainerError, ContainerReader, ContainerWriter
 from ..container.format import dtype_name as _dtype_name, resolve_dtype
+from ..container.io import in_decode_pool, shared_decode_pool
 
 MANIFEST_FORMAT = 2
 CHUNK = 1 << 18
@@ -172,8 +173,15 @@ def save_tree(tree, directory: str | Path, extra: dict | None = None,
             "ratio": comp / max(raw, 1)}
 
 
-def restore_tree(directory: str | Path):
-    """-> (pytree of np arrays, extra dict). Mesh-independent."""
+def restore_tree(directory: str | Path, parallel: bool = True):
+    """-> (pytree of np arrays, extra dict). Mesh-independent.
+
+    ``parallel=True`` (default) restores leaves concurrently on the shared
+    container decode pool — one task per leaf container, each decoded
+    serially inside its task (file-level parallelism; a single-leaf tree
+    instead parallelizes across that leaf's chunks).  Leaf order, values and
+    bytes are identical to the serial path; the first failing leaf's
+    exception propagates to the caller."""
     directory = Path(directory)
     manifest = json.loads((directory / "manifest.json").read_text())
     if manifest.get("format") != MANIFEST_FORMAT:
@@ -183,12 +191,24 @@ def restore_tree(directory: str | Path):
             f"{MANIFEST_FORMAT} (pre-container legacy checkpoints are not "
             "readable — re-save with the current code)"
         )
-    leaves = []
-    for i, rec in enumerate(manifest["arrays"]):
+    recs = manifest["arrays"]
+
+    def load(i: int, rec: dict, chunk_parallel) -> np.ndarray:
         with ContainerReader(directory / f"arr_{i}.fpc") as r:
-            flat = r.read_all()
+            flat = r.read_all(parallel=chunk_parallel)
         dt = resolve_dtype(rec["dtype"])
-        leaves.append(flat.astype(dt, copy=False).reshape(rec["shape"]))
+        return flat.astype(dt, copy=False).reshape(rec["shape"])
+
+    if parallel and len(recs) > 1 and not in_decode_pool():
+        # map() preserves leaf order and re-raises the first failure here
+        leaves = list(shared_decode_pool().map(
+            lambda ir: load(ir[0], ir[1], False), enumerate(recs)
+        ))
+    else:
+        # single-leaf trees (or serial mode) parallelize within the leaf
+        # when it is big enough to pay off
+        leaves = [load(i, rec, "auto" if parallel else False)
+                  for i, rec in enumerate(recs)]
     it = iter(leaves)
     tree = _build_tree(manifest["tree"], it)
     if next(it, None) is not None:

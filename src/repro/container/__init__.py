@@ -35,8 +35,12 @@ from .format import (  # noqa: F401
     serialize_raw_chunk,
 )
 from .io import (  # noqa: F401
+    PARALLEL_MIN_BYTES,
     ContainerReader,
     ContainerWriter,
+    default_decode_workers,
     dumps,
+    in_decode_pool,
     loads,
+    shared_decode_pool,
 )

@@ -65,7 +65,12 @@ def resolve_dtype(name: str) -> np.dtype:
         import ml_dtypes
 
         return np.dtype(ml_dtypes.bfloat16)
-    return np.dtype(name)
+    try:
+        return np.dtype(name)
+    except (TypeError, ValueError):
+        # the header dtype name is producer data (and not CRC-covered), so a
+        # garbled name is corruption, not a programming error
+        raise ContainerFormatError(f"unknown container dtype {name!r}") from None
 
 
 def dtype_name(dt) -> str:
@@ -161,7 +166,12 @@ class _Cursor:
         return struct.unpack("<q", self.take(8))[0]
 
     def str8(self) -> str:
-        return self.take(self.u8()).decode("ascii")
+        try:
+            return self.take(self.u8()).decode("ascii")
+        except UnicodeDecodeError:
+            raise ContainerFormatError(
+                "corrupt string field (non-ASCII bytes)"
+            ) from None
 
     def bytes32(self) -> bytes:
         return self.take(self.u32())
@@ -206,6 +216,14 @@ def decode_header(cur: _Cursor) -> dict:
     backend_name = cur.str8()
     if spec_name and spec_name not in _SPEC_DTYPES:
         raise ContainerFormatError(f"unknown float spec {spec_name!r}")
+    if spec_name and _SPEC_DTYPES[spec_name] != dtype_name:
+        # the header stores the dtype redundantly with the float spec; a
+        # mismatch (only corruption can produce one — the writer derives
+        # both from one dtype) must not silently pick either side
+        raise ContainerFormatError(
+            f"container header dtype {dtype_name!r} contradicts float "
+            f"spec {spec_name!r}"
+        )
     return {
         "version": version,
         "spec_name": spec_name,
@@ -498,6 +516,14 @@ def decode_index(buf: bytes, nchunks: int) -> tuple[list[dict], dict]:
          "method_id": cur.u8()}
         for _ in range(nchunks)
     ]
+    if cur.pos != len(buf):
+        # the footer's nchunks is not CRC-covered; a flipped count that
+        # under-reads the index would otherwise truncate the container to a
+        # plausible-looking prefix of its chunks
+        raise ContainerFormatError(
+            f"container index holds {len(buf) - cur.pos} bytes beyond the "
+            f"{nchunks} chunk entries the footer declares"
+        )
     return entries, user_meta
 
 

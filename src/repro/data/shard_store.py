@@ -62,9 +62,13 @@ class ShardStore:
             m["chunks"] = [r.chunk_info(i) for i in range(r.nchunks)]
         return m
 
-    def read(self, name: str) -> np.ndarray:
+    def read(self, name: str, parallel: bool | str = "auto") -> np.ndarray:
+        """Decode a whole shard; ``parallel="auto"`` (default) overlaps
+        backend decompression with the inverse transforms on the shared
+        decode pool once the shard is large enough to amortize it
+        (byte-identical to the serial path, chunk order preserved)."""
         with ContainerReader(self._path(name)) as r:
-            flat = r.read_all()
+            flat = r.read_all(parallel=parallel)
             meta = r.user_meta
         return flat.reshape(meta["shape"]).astype(
             resolve_dtype(meta["dtype"]), copy=False
@@ -74,6 +78,21 @@ class ShardStore:
         """Random access: decode one chunk without touching the rest."""
         with ContainerReader(self._path(name)) as r:
             return r.read_chunk(i).reshape(-1)
+
+    def iter_chunks(self, name: str, prefetch: int = 2):
+        """Ordered streaming iteration over a shard's decoded chunks with up
+        to ``prefetch`` chunks decoded ahead of the consumer — the data-path
+        face of ``ContainerReader.iter_chunks`` (prefetch=0 is fully lazy).
+        Memory stays O(prefetch · chunk), never O(shard)."""
+        with ContainerReader(self._path(name)) as r:
+            it = r.iter_chunks(prefetch=prefetch)
+            try:
+                for chunk in it:
+                    yield chunk.reshape(-1)
+            finally:
+                # on early abandonment, drain the prefetch window BEFORE the
+                # with-block closes the reader under in-flight workers
+                it.close()
 
     def ratio(self, name: str) -> float:
         with ContainerReader(self._path(name)) as r:

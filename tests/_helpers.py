@@ -1,0 +1,14 @@
+"""Shared test helpers (not collected: no ``test_`` prefix)."""
+import numpy as np
+
+
+def words(x) -> np.ndarray:
+    """View an array as its raw integer words for bitwise comparison
+    (bfloat16 — ml_dtypes-registered or 2-byte void — as uint16; ints
+    pass through)."""
+    x = np.asarray(x)
+    if x.dtype.kind in "iu":
+        return x
+    if x.dtype.kind == "V" or str(x.dtype) == "bfloat16":
+        return x.view(np.uint16)
+    return x.view({8: np.uint64, 4: np.uint32, 2: np.uint16}[x.dtype.itemsize])

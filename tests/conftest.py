@@ -10,6 +10,7 @@ With `hypothesis` installed, the real library is used untouched.
 from __future__ import annotations
 
 import importlib.util
+import inspect
 import math
 import random
 import struct
@@ -114,6 +115,22 @@ if importlib.util.find_spec("hypothesis") is None:  # pragma: no branch
         assert not kw_strategies, "mini-hypothesis supports positional only"
 
         def deco(fn):
+            # strategies fill the TRAILING parameters; bind them by NAME so
+            # leading fixture / @pytest.mark.parametrize arguments (which
+            # pytest passes as keywords) compose with @given, the way real
+            # hypothesis allows.  The same split also yields the leading-
+            # params signature exposed to pytest below.
+            _names = _lead_sig = None
+            try:
+                sig = inspect.signature(fn)
+                params = list(sig.parameters.values())
+                if len(strategies) <= len(params):
+                    split = len(params) - len(strategies)
+                    _names = [p.name for p in params[split:]]
+                    _lead_sig = sig.replace(parameters=params[:split])
+            except (TypeError, ValueError):  # pragma: no cover
+                pass
+
             def wrapper(*fixture_args, **fixture_kwargs):
                 cfg = getattr(fn, "_mini_settings", None) or getattr(
                     wrapper, "_mini_settings", {}
@@ -134,7 +151,10 @@ if importlib.util.find_spec("hypothesis") is None:  # pragma: no branch
 
             def _run_example(fn, fargs, fkwargs, ex):
                 try:
-                    fn(*fargs, *ex, **fkwargs)
+                    if _names is not None:
+                        fn(*fargs, **fkwargs, **dict(zip(_names, ex)))
+                    else:
+                        fn(*fargs, *ex, **fkwargs)
                 except Exception:
                     print(f"mini-hypothesis falsifying example: {ex!r}")
                     raise
@@ -144,6 +164,10 @@ if importlib.util.find_spec("hypothesis") is None:  # pragma: no branch
             wrapper.__doc__ = fn.__doc__
             wrapper.__module__ = fn.__module__
             wrapper._mini_settings = getattr(fn, "_mini_settings", {})
+            if _lead_sig is not None:
+                # expose the leading (non-strategy) parameters so pytest
+                # can still bind fixtures / parametrize arguments
+                wrapper.__signature__ = _lead_sig
             return wrapper
 
         return deco

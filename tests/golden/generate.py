@@ -1,5 +1,5 @@
 """Golden container fixtures: one checked-in reference blob per transform
-family (plus raw / passthrough cases).
+family (plus raw / passthrough / empty / zstd-backend cases).
 
 The *data* is derived from a fixed LCG (no numpy RNG dependency, so the
 bytes regenerate identically on any platform), the *method* is forced, and
@@ -8,12 +8,24 @@ committed bytes with the current code and compares bitwise against the
 regenerated source — so any change that breaks decode compatibility of the
 on-disk format fails CI instead of silently orphaning old containers.
 
+Every ``METHOD_IDS`` entry is covered (identity, compact_bins,
+multiply_shift, shift_separate, shift_save_even) plus the RAW record path;
+the zstd case exercises the non-default backend and can only be written
+where the ``zstandard`` wheel exists — ``--missing-only`` lets the
+zstd-installed CI leg generate it without touching the committed fixtures.
+
 Regenerate (ONLY on an intentional, version-bumped format change):
 
   PYTHONPATH=src python -m tests.golden.generate
+
+Generate absent-only (e.g. the zstd fixture on a zstd-capable host):
+
+  PYTHONPATH=src python -m tests.golden.generate --missing-only
 """
 from __future__ import annotations
 
+import importlib.util
+import sys
 from pathlib import Path
 
 import numpy as np
@@ -69,50 +81,76 @@ def data_i32(n: int = 2048, seed: int = 5) -> np.ndarray:
     return (_lcg_u64(n, seed) >> np.uint64(40)).astype(np.int32)
 
 
-# name -> (data_fn, dtype tag, method, params, n_fixture_chunks)
+def data_empty(n: int = 0, seed: int = 0) -> np.ndarray:
+    return np.zeros(0, np.float64)
+
+
+# name -> (data_fn, dtype tag, method, params, n_fixture_chunks, backend)
 CASES = {
     "identity_passthrough_f64": (data_f64_passthrough, "float64",
-                                 "identity", {}, 2),
+                                 "identity", {}, 2, "zlib"),
     "compact_bins_f64": (data_f64, "float64", "compact_bins",
-                         {"n_bins": 4}, 2),
+                         {"n_bins": 4}, 2, "zlib"),
     "multiply_shift_f64": (data_f64, "float64", "multiply_shift",
-                           {"D": 4}, 2),
+                           {"D": 4}, 2, "zlib"),
     "shift_separate_f64": (data_f64, "float64", "shift_separate",
-                           {"D": 2}, 2),
+                           {"D": 2}, 2, "zlib"),
     "shift_save_even_f64": (data_f64, "float64", "shift_save_even",
-                            {"D": 8}, 2),
+                            {"D": 8}, 2, "zlib"),
     "shift_save_even_f32": (data_f32, "float32", "shift_save_even",
-                            {"D": 8}, 2),
+                            {"D": 8}, 2, "zlib"),
     "multiply_shift_bf16": (data_bf16, "bfloat16", "multiply_shift",
-                            {"D": 3}, 2),
-    "raw_i32": (data_i32, "int32", None, None, 2),
+                            {"D": 3}, 2, "zlib"),
+    "raw_i32": (data_i32, "int32", None, None, 2, "zlib"),
+    # finalized-but-chunkless container (header + index + footer only)
+    "empty_f64": (data_empty, "float64", None, None, 0, "zlib"),
+    # non-default backend leg: written/checked only where zstandard exists
+    "shift_save_even_f64_zstd": (data_f64, "float64", "shift_save_even",
+                                 {"D": 8}, 2, "zstd"),
 }
+
+
+def backend_importable(backend: str) -> bool:
+    if backend == "zstd":
+        return importlib.util.find_spec("zstandard") is not None
+    return True
 
 
 def fixture_path(name: str) -> Path:
     return GOLDEN_DIR / f"{name}.fpc"
 
 
+def fixture_available(name: str) -> bool:
+    """Fixture file exists AND its backend can decode on this host."""
+    return fixture_path(name).exists() and backend_importable(CASES[name][5])
+
+
 def write_fixture(name: str) -> Path:
     from repro.container import ContainerWriter
 
-    data_fn, dtype, method, params, nchunks = CASES[name]
+    data_fn, dtype, method, params, nchunks, backend = CASES[name]
     x = data_fn()
     flat = x.reshape(-1)
-    step = -(-flat.size // nchunks)
-    kw = {}
+    step = -(-flat.size // nchunks) if nchunks else 0
+    kw = {"backend": backend}
     if method is not None:
-        kw = {"method": method, "params": params, "fallback_identity": False}
+        kw.update(method=method, params=params, fallback_identity=False)
     path = fixture_path(name)
     with ContainerWriter(path, dtype=x.dtype,
                          user_meta={"case": name}, **kw) as w:
-        for s in range(0, flat.size, step):
+        for s in range(0, flat.size, step or 1):
             w.append(flat[s : s + step])
     return path
 
 
-def main():
+def main(argv=None):
+    missing_only = "--missing-only" in (argv or sys.argv[1:])
     for name in CASES:
+        if missing_only and fixture_path(name).exists():
+            continue
+        if not backend_importable(CASES[name][5]):
+            print(f"skipping {name}: backend {CASES[name][5]!r} not importable")
+            continue
         p = write_fixture(name)
         print(f"wrote {p.name}: {p.stat().st_size} bytes")
 

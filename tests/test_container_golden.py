@@ -4,7 +4,10 @@ on every future revision — this is the decode-compatibility contract of the
 on-disk format (docs/format.md).  A failure here means the format changed
 without a version bump + migration story.
 
-CI runs this module as the dedicated `container-compat` step.
+CI runs this module as the dedicated `container-compat` step; the zstd
+fixture additionally runs in the zstd-installed matrix leg (it is generated
+there with ``generate.py --missing-only`` because the default leg — and any
+host without the ``zstandard`` wheel — can neither write nor decode it).
 """
 from pathlib import Path
 
@@ -16,29 +19,41 @@ from repro.container import (
     ContainerFormatError,
     ContainerReader,
 )
-from tests.golden.generate import CASES, fixture_path
+from tests._helpers import words as _words
+from tests.golden.generate import (
+    CASES,
+    backend_importable,
+    fixture_path,
+)
 
 
-def _words(x):
-    x = np.asarray(x)
-    if x.dtype.kind in "iu":
-        return x
-    if x.dtype.kind == "V" or str(x.dtype) == "bfloat16":
-        return x.view(np.uint16)
-    return x.view({8: np.uint64, 4: np.uint32, 2: np.uint16}[x.dtype.itemsize])
-
-
-@pytest.mark.parametrize("name", sorted(CASES))
-def test_golden_fixture_decodes_bitwise(name):
+def _require(name: str) -> Path:
+    """Path of a golden fixture, with the optional-backend escape hatch:
+    a zstd fixture is only checkable where zstandard imports."""
+    data_fn, dtype, method, params, nchunks, backend = CASES[name]
+    if not backend_importable(backend):
+        pytest.skip(f"backend {backend!r} not importable on this host")
     path = fixture_path(name)
+    if backend != "zlib" and not path.exists():
+        pytest.skip(
+            f"optional-backend fixture {path.name} not generated here — "
+            "run: PYTHONPATH=src python -m tests.golden.generate --missing-only"
+        )
     assert path.exists(), (
         f"missing golden fixture {path.name} — regenerate ONLY on an "
         "intentional format change: PYTHONPATH=src python -m tests.golden.generate"
     )
-    data_fn, dtype, method, params, nchunks = CASES[name]
+    return path
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_golden_fixture_decodes_bitwise(name):
+    path = _require(name)
+    data_fn, dtype, method, params, nchunks, backend = CASES[name]
     want = data_fn().reshape(-1)
     with ContainerReader(path) as r:
         assert r.user_meta == {"case": name}
+        assert r.backend == backend
         assert r.nchunks == nchunks
         if method is not None:
             # the committed bytes really exercise this family (no silent
@@ -47,9 +62,15 @@ def test_golden_fixture_decodes_bitwise(name):
                 [method] * nchunks
             )
         got = r.read_all()
+        # the parallel decode pipeline is held to the same golden contract
+        got_par = r.read_all(parallel=True)
     assert str(got.dtype) == dtype
     assert np.array_equal(_words(got), _words(want)), (
         f"golden fixture {name} no longer decodes to its source data"
+    )
+    assert got_par.dtype == got.dtype
+    assert np.array_equal(_words(got_par), _words(got)), (
+        f"golden fixture {name}: parallel decode diverges from serial"
     )
 
 
@@ -57,10 +78,11 @@ def test_golden_fixture_decodes_bitwise(name):
 def test_golden_fixture_encoded_fields(name):
     """Transform fixtures also round-trip at the Encoded level (method,
     params and per-family metadata deserialize to usable values)."""
-    data_fn, dtype, method, params, nchunks = CASES[name]
+    data_fn, dtype, method, params, nchunks, backend = CASES[name]
     if method is None:
-        pytest.skip("raw fixture has no Encoded records")
-    with ContainerReader(fixture_path(name)) as r:
+        pytest.skip("raw/empty fixture has no Encoded records")
+    path = _require(name)
+    with ContainerReader(path) as r:
         enc = r.read_encoded(0)
     assert enc.method == method
     assert enc.params == params
@@ -69,6 +91,7 @@ def test_golden_fixture_encoded_fields(name):
 
 # ---------------------------------------------------------------------------
 # the format's trust-nothing error paths, exercised on committed bytes
+# (the exhaustive corruption sweep lives in tests/test_container_fuzz.py)
 # ---------------------------------------------------------------------------
 
 @pytest.fixture(scope="module")
