@@ -1,0 +1,113 @@
+"""CI perf-regression gate: compare a fresh ``BENCH_codec`` run against the
+committed baseline.
+
+Two classes of comparison, reflecting what each number means:
+
+* **Timings** (every non-underscore row's ``us``) drift with shared-runner
+  load, so the gate is deliberately generous: a row fails only when
+  ``current > baseline * max_slowdown + max(min_us, 0.25 * baseline)``.
+  The additive slack keeps micro-rows from failing on scheduler noise;
+  the flip side is that rows far below the ~0.5 ms floor are only gated
+  against blowups PAST that floor (a 4 us row must regress to ~0.5 ms to
+  fail), which is the deliberate trade on a noisy shared runner.
+  A row tracked in the baseline that stops being emitted FAILS, same as a
+  vanished count — a silently dropped row is indistinguishable from a
+  regression.  Renaming or retiring a row must refresh the committed
+  baseline in the same PR.
+* **Structural counts** (the ``_counts`` section: phase-1 scoring dispatches
+  / device_gets per auto-encode) must match EXACTLY — a dispatch-count
+  regression is a code property, not host noise, and is precisely what the
+  stacked scoring grid exists to pin.
+
+Rows present only in the CURRENT run are reported but never fail (new
+benchmarks may land before their baseline refresh; the refresh commits the
+regenerated JSON).  The ``_env`` section is printed so a genuine timing
+failure can be attributed to hardware vs. code.
+
+Usage::
+
+    python -m benchmarks.check_regression BASELINE.json CURRENT.json \
+        [--max-slowdown 1.5] [--min-us 500]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def compare(base: dict, cur: dict, max_slowdown: float, min_us: float):
+    """Returns (failures, notes) as printable strings."""
+    failures: list[str] = []
+    notes: list[str] = []
+
+    counts_b = base.get("_counts", {})
+    counts_c = cur.get("_counts", {})
+    for k in sorted(counts_b):
+        if k not in counts_c:
+            # a counter the baseline tracks must keep being emitted — a
+            # silently vanished count is indistinguishable from a regression
+            failures.append(f"count {k}: tracked in baseline but missing "
+                            f"from current run")
+        elif counts_b[k] != counts_c[k]:
+            failures.append(
+                f"count {k}: {counts_b[k]} -> {counts_c[k]} (must match exactly)"
+            )
+    for k in sorted(set(counts_c) - set(counts_b)):
+        notes.append(f"count {k}: new (no baseline yet)")
+
+    rows_b = {k: v for k, v in base.items() if not k.startswith("_")}
+    rows_c = {k: v for k, v in cur.items() if not k.startswith("_")}
+    for k in sorted(rows_b):
+        if k not in rows_c:
+            failures.append(f"row {k}: tracked in baseline but missing from "
+                            f"current run (refresh the baseline if renamed)")
+            continue
+        b, c = float(rows_b[k]["us"]), float(rows_c[k]["us"])
+        ratio = c / b if b else float("inf")
+        if c > b * max_slowdown + max(min_us, 0.25 * b):
+            failures.append(
+                f"row {k}: {b:.1f}us -> {c:.1f}us ({ratio:.2f}x > "
+                f"{max_slowdown}x + noise slack allowed)"
+            )
+        else:
+            notes.append(f"row {k}: {b:.1f}us -> {c:.1f}us ({ratio:.2f}x)")
+    for k in sorted(set(rows_c) - set(rows_b)):
+        notes.append(f"row {k}: new (no baseline yet)")
+    return failures, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--max-slowdown", type=float, default=1.5,
+                    help="relative timing tolerance (default 1.5x)")
+    ap.add_argument("--min-us", type=float, default=500.0,
+                    help="minimum additive noise slack in us (default 500)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.current) as f:
+        cur = json.load(f)
+
+    failures, notes = compare(base, cur, args.max_slowdown, args.min_us)
+
+    env_b, env_c = base.get("_env", {}), cur.get("_env", {})
+    if env_b or env_c:
+        print("baseline env:", json.dumps(env_b, sort_keys=True))
+        print("current  env:", json.dumps(env_c, sort_keys=True))
+    for line in notes:
+        print("  ok:", line)
+    if failures:
+        print(f"\nPERF GATE FAILED ({len(failures)} regression(s)):")
+        for line in failures:
+            print("  FAIL:", line)
+        return 1
+    print(f"\nperf gate passed ({len(notes)} row(s) within tolerance)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

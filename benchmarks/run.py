@@ -4,7 +4,6 @@ framework-path benches.  Prints ``name,us_per_call,derived`` CSV.
   PYTHONPATH=src python -m benchmarks.run [--only paper|codec|roofline] [--smoke]
 """
 import argparse
-import sys
 
 
 def main() -> None:

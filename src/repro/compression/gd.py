@@ -18,7 +18,7 @@ import math
 
 import numpy as np
 
-from .bitplane import _as_words, pack_uint_stream, unpack_uint_stream
+from .bitplane import _as_words, pack_uint_stream
 
 
 @functools.lru_cache(maxsize=65536)

@@ -33,7 +33,6 @@ def greedy_gd_select(x, sample_limit: int = 8192, max_rounds: int = 64) -> int:
         sel = words[::step][:sample_limit]
     else:
         sel = words
-    scale = len(words) / len(sel)
 
     shared = int(shared_bit_mask(sel)) & ((1 << width) - 1)
 
@@ -58,7 +57,6 @@ def greedy_gd_select(x, sample_limit: int = 8192, max_rounds: int = 64) -> int:
         if cand_best is None or cand_best[0] >= best:
             break
         best, mask = cand_best[0], cand_best[1]
-    del scale
     return mask
 
 

@@ -8,7 +8,7 @@ import zlib
 import numpy as np
 
 from ..container.backends import available_backends, get_backend
-from ..core.float_bits import F32, F64, BF16, FloatSpec
+from ..core.float_bits import F32, F64, BF16
 from ..core.pipeline import Encoded
 from .bitplane import _as_words, shared_bits_report, words_to_bitplanes
 from .gd import gd_compress

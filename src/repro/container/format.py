@@ -18,7 +18,6 @@ fails loudly instead of executing anything.
 """
 from __future__ import annotations
 
-import io
 import json
 import struct
 import zlib

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from .float_bits import FloatSpec, F64, mantissa, spec_for, to_bits, ulp
+from .float_bits import FloatSpec, F64, mantissa, spec_for, to_bits
 
 
 # ---------------------------------------------------------------------------

@@ -10,13 +10,16 @@ transform then operates on same-binade significands.
 ``method="auto"`` implements the paper's Fig. 6 "best of the four techniques"
 selection as a two-phase engine:
 
-* **Phase 1 — sample-select.**  Candidates run their forward transform on a
-  strided sample and are scored by the fused analytic estimator
-  (:mod:`repro.core.scoring`: shared-bit mask + per-bitplane transition /
-  entropy counts in one jitted pass).  All estimates stay on device and are
-  fetched with a single round-trip.  Only the top finalists (plus the
-  identity no-prep baseline) are re-scored with the real compressor (zlib by
-  default; any ``size_fn`` can be passed).
+* **Phase 1 — sample-select.**  The WHOLE candidate grid runs as ONE
+  stacked jit dispatch on a strided sample (:mod:`repro.core.scoring`:
+  every family's forward arithmetic + the fused ``kernels/scoregrid``
+  bit-statistics estimator over the stacked ``[n_candidates, sample]``
+  word grid), fetched with a single ``device_get``.  The per-family jits
+  of PR 1 stay selectable via ``engine="perfamily"`` (or the
+  ``REPRO_SCORING_ENGINE`` env var) as the A/B flag and parity oracle —
+  scores and winners are bitwise-identical between engines.  Only the top
+  finalists (plus the identity no-prep baseline) are re-scored with the
+  real compressor (zlib by default; any ``size_fn`` can be passed).
 * **Phase 2 — chunked apply + verify.**  The winner is applied to the full
   array and round-trip verified chunk by chunk, with the verification
   verdicts reduced on device and fetched together with the transformed
@@ -31,6 +34,7 @@ the vectorized transform kernels keep that path fast too.
 from __future__ import annotations
 
 import dataclasses
+import os
 import zlib
 from typing import Callable
 
@@ -85,6 +89,17 @@ DEFAULT_SAMPLE_ELEMS = 4096
 DEFAULT_TOP_K = 4
 # phase-2 verification chunk granularity (memory bound, not a perf knob)
 DEFAULT_CHUNK_ELEMS = 1 << 20
+# phase-1 scoring engine: "stacked" = the whole candidate grid in ONE jit
+# dispatch + ONE device_get (core/scoring.py + kernels/scoregrid);
+# "perfamily" = one fused jit per candidate (PR 1) — the A/B flag and the
+# stacked engine's parity oracle.  Winners are identical by construction
+# (asserted bitwise in tests/test_scoring.py).  The env var is read at
+# call time so flipping it mid-process (tests, notebooks) takes effect.
+_ENGINES = ("stacked", "perfamily")
+
+
+def default_engine() -> str:
+    return os.environ.get("REPRO_SCORING_ENGINE", "stacked")
 
 
 @dataclasses.dataclass
@@ -277,6 +292,7 @@ def select_method(
     spec: FloatSpec | None = None,
     sample_elems: int = DEFAULT_SAMPLE_ELEMS,
     top_k: int = DEFAULT_TOP_K,
+    engine: str | None = None,
 ) -> tuple[str, dict]:
     """Phase-1 primitive: rank candidates on ``x`` (typically a strided
     sample) and return the winning ``(method, params)`` without applying it
@@ -286,7 +302,7 @@ def select_method(
     if prep.n_active == 0:
         return "identity", {}
     ranked, _first = _rank_candidates(prep, candidates, size_fn,
-                                      sample_elems, top_k)
+                                      sample_elems, top_k, engine)
     if not ranked:
         raise T.TransformError("no feasible transform candidate")
     name, p = ranked[0]
@@ -294,12 +310,15 @@ def select_method(
 
 
 def _rank_candidates(prep: _Prepared, candidates, size_fn, sample_elems,
-                     top_k):
+                     top_k, engine: str | None = None):
     """Shared selection core -> (ranked candidate list, first_applied).
 
     ``size_fn is None`` selects the fused analytic engine (zlib finalists);
     a custom ``size_fn`` keeps the seed's exact compressor-matched
     semantics (every candidate scored on the full array, pre-verified)."""
+    engine = engine or default_engine()
+    if engine not in _ENGINES:
+        raise ValueError(f"unknown scoring engine {engine!r}; use {_ENGINES}")
     analytic = size_fn is None
     has_identity = any(n_ == "identity" for n_, _ in candidates)
     if analytic:
@@ -321,7 +340,7 @@ def _rank_candidates(prep: _Prepared, candidates, size_fn, sample_elems,
         )
         ranked = _select_analytic(
             prep.xf, prep.finite, prep.X, prep.spec, candidates, size_fn,
-            common_est, sample_elems, top_k, has_identity,
+            common_est, sample_elems, top_k, has_identity, engine=engine,
         )
         return ranked, None
     exponents_z, signs_z, passthrough_z = prep.pack_common()
@@ -360,6 +379,7 @@ def encode(
     sample_elems: int = DEFAULT_SAMPLE_ELEMS,
     top_k: int = DEFAULT_TOP_K,
     chunk_elems: int = DEFAULT_CHUNK_ELEMS,
+    engine: str | None = None,
 ) -> Encoded:
     """presample: if set and method=='auto', candidate selection runs on a
     strided sample of `presample` elements first (legacy §Perf C knob — the
@@ -374,7 +394,7 @@ def encode(
                 xf[:: step][:presample], method="auto",
                 candidates=candidates, size_fn=size_fn, spec=spec,
                 sample_elems=sample_elems, top_k=top_k,
-                chunk_elems=chunk_elems,
+                chunk_elems=chunk_elems, engine=engine,
             )
             try:
                 return encode(
@@ -386,6 +406,7 @@ def encode(
     return _encode_full(
         x, method, params, candidates, size_fn, spec,
         sample_elems=sample_elems, top_k=top_k, chunk_elems=chunk_elems,
+        engine=engine,
     )
 
 
@@ -399,6 +420,7 @@ def _encode_full(
     sample_elems: int = DEFAULT_SAMPLE_ELEMS,
     top_k: int = DEFAULT_TOP_K,
     chunk_elems: int = DEFAULT_CHUNK_ELEMS,
+    engine: str | None = None,
 ) -> Encoded:
     if method != "auto":
         # explicit method: phase 2 only (identity and all-passthrough
@@ -416,7 +438,7 @@ def _encode_full(
     # size_fn keeps the seed's exact compressor-matched selection.
     has_identity = any(n_ == "identity" for n_, _ in candidates)
     ranked, first_applied = _rank_candidates(
-        prep, candidates, size_fn, sample_elems, top_k
+        prep, candidates, size_fn, sample_elems, top_k, engine
     )
 
     # phase 2: apply + verify finalists in rank order
@@ -465,9 +487,26 @@ def _scaled_meta_bytes(meta, scale: float) -> float:
 
 
 
+def _generic_score(name, p, Xs, spec, extrema, scale):
+    """Score a transform without a fused builder: generic forward +
+    `score_significands` (its own dispatch; the estimate handle joins the
+    engine's single fetch).  Returns None when the forward rejects."""
+    fwd, _ = T.TRANSFORMS[name]
+    try:
+        Xt, off, meta = fwd(Xs, spec=spec, extrema=extrema, **p)
+    except T.TransformError:
+        return None
+    S.PHASE1.dispatches += 1
+    return S.CandidateScore(
+        name=name, params=p,
+        meta_bytes=_scaled_meta_bytes(meta, scale),
+        _dev=S.score_significands(Xt, off, spec),
+    )
+
+
 def _select_analytic(
     xf, finite, X, spec, candidates, size_fn, common_meta,
-    sample_elems, top_k, has_identity=True,
+    sample_elems, top_k, has_identity=True, engine: str = "stacked",
 ):
     """Analytic sample-select: rank candidates by the fused plane-stats size
     estimate; re-score the top finalists (+ identity) with the real
@@ -485,33 +524,35 @@ def _select_analytic(
 
     scores: list[S.CandidateScore] = []
     deferred: list[tuple[str, dict]] = []  # valid on full, unscorable on sample
-    for name, p in candidates:
-        if name == "identity":
-            continue
-        try:
-            dev = S.score_candidate(name, p, Xs, spec, extrema,
-                                    full_n=n_active)
-        except T.TransformError:
-            continue
-        if dev == "defer":
-            deferred.append((name, p))
-            continue
-        if dev is not None:
-            scores.append(S.CandidateScore(name=name, params=p, _dev=dev))
-            continue
-        # transform without a fused scorer: generic forward + scoring
-        fwd, _ = T.TRANSFORMS[name]
-        try:
-            Xt, off, meta = fwd(Xs, spec=spec, extrema=extrema, **p)
-        except T.TransformError:
-            continue
-        scores.append(
-            S.CandidateScore(
-                name=name, params=p,
-                meta_bytes=_scaled_meta_bytes(meta, scale),
-                _dev=S.score_significands(Xt, off, spec),
-            )
+    if engine == "stacked":
+        # the whole candidate grid in ONE stacked jit dispatch + ONE
+        # device_get (scoring.score_candidates_stacked); a transform
+        # without a fused builder gets its own dispatch but its estimate
+        # handle resolves inside that same single fetch
+        scores, deferred = S.score_candidates_stacked(
+            candidates, Xs, spec, extrema, full_n=n_active,
+            generic_score_fn=lambda name, p: _generic_score(
+                name, p, Xs, spec, extrema, scale
+            ),
         )
+    else:
+        for name, p in candidates:
+            if name == "identity":
+                continue
+            try:
+                dev = S.score_candidate(name, p, Xs, spec, extrema,
+                                        full_n=n_active)
+            except T.TransformError:
+                continue
+            if dev == "defer":
+                deferred.append((name, p))
+                continue
+            if dev is not None:
+                scores.append(S.CandidateScore(name=name, params=p, _dev=dev))
+                continue
+            s = _generic_score(name, p, Xs, spec, extrema, scale)
+            if s is not None:
+                scores.append(s)
     S.fetch_scores(scores)  # single device round-trip for all estimates
     scores = [s for s in scores if s.valid]
     for s in scores:

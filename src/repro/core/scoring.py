@@ -4,8 +4,7 @@ The paper's Fig. 6 "best of the four techniques" selection needs a size
 estimate for every (transform, parameter) candidate.  Compressing the full
 transformed stream per candidate (the seed behaviour) makes selection cost
 ``O(candidates x zlib(n))`` and dominates end-to-end encode time.  This
-module replaces that with a cheap analytic proxy computed in one fused
-jitted pass per candidate (``plane_stats_u64`` in the sharedbits ops):
+module replaces that with a cheap analytic proxy computed on device:
 
 * per-bitplane set-bit counts  -> order-0 entropy H(p1) per plane,
 * per-bitplane transition counts -> first-order (run-length) entropy H(pt),
@@ -20,6 +19,23 @@ candidates: the pipeline re-scores the top finalists (plus the identity
 baseline when listed) with the real compressor and round-trip-verifies the
 winner before shipping, so a proxy mistake can cost ratio, never
 correctness.
+
+Two engines share one set of family "builders" (forward arithmetic +
+metadata model + feasibility verdict, all traceable):
+
+* **stacked** (default) — the WHOLE candidate grid runs as ONE jit dispatch
+  (:func:`score_candidates_stacked`): every family's forward transform plus
+  the fused bit-statistics estimator of ``kernels/scoregrid`` over the
+  stacked ``[n_candidates, sample]`` word grid, fetched with ONE
+  ``device_get``.  On TPU the statistics pass is the ``scoregrid`` Pallas
+  kernel; on CPU the batched-jnp twin (identical integers) fuses into the
+  same dispatch.
+* **perfamily** — one fused jit per candidate (:func:`score_candidate`,
+  the PR 1 engine), kept as the A/B flag and the stacked engine's parity
+  oracle (tests assert bitwise-equal scores and winners).
+
+:data:`PHASE1` counts scoring dispatches and host fetches so tests and the
+CI bench gate can pin the single-dispatch property instead of trusting it.
 """
 from __future__ import annotations
 
@@ -29,9 +45,34 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
+from ..kernels import INTERPRET_DEFAULT
+from ..kernels.scoregrid.ops import estimate_bits_grid, finalize_bits_grid
 from ..kernels.sharedbits.ops import plane_stats_u64
 from .float_bits import FloatSpec, to_bits
+
+# on TPU the stacked estimator runs the compiled Pallas scoregrid kernel;
+# on CPU its batched-jnp twin fuses into the same stacked dispatch
+_USE_PALLAS_GRID = not INTERPRET_DEFAULT
+
+
+@dataclasses.dataclass
+class Phase1Stats:
+    """Observable phase-1 cost model: how many device dispatches and host
+    round-trips candidate scoring actually issued (cumulative; callers
+    reset).  The stacked engine must show (1, 1) per selection — asserted in
+    tests/test_scoring.py and compared exactly by the CI bench gate."""
+
+    dispatches: int = 0     # jitted scorer invocations (grid or per-family)
+    device_gets: int = 0    # host fetches of scoring results
+
+    def reset(self) -> None:
+        self.dispatches = 0
+        self.device_gets = 0
+
+
+PHASE1 = Phase1Stats()
 
 
 @dataclasses.dataclass
@@ -52,40 +93,19 @@ class CandidateScore:
         return self.est_bytes + self.meta_bytes
 
 
-@jax.jit
-def _estimate_bits_from_stats(ones, transitions, n):
-    """sum over planes of n * min(H(ones/n), H(transitions/(n-1))) bits."""
-    nf = jnp.asarray(n, jnp.float64)
-
-    def h2(p):
-        p = jnp.clip(p, 1e-12, 1.0 - 1e-12)
-        return -(p * jnp.log2(p) + (1.0 - p) * jnp.log2(1.0 - p))
-
-    h0 = h2(ones.astype(jnp.float64) / nf)
-    ht = h2(transitions.astype(jnp.float64) / jnp.maximum(nf - 1.0, 1.0))
-    per_plane = jnp.minimum(h0, ht)
-    constant = (ones == 0) | (ones == n)
-    per_plane = jnp.where(constant, 0.0, per_plane)
-    return (nf * per_plane).sum()
-
-
 @functools.partial(jax.jit, static_argnames=("lanes",))
-def _pooled_byte_bits(words, lanes: int = 8):
-    """Order-0 entropy of the POOLED byte stream (one histogram over all
-    byte positions).  DEFLATE codes literals with a single Huffman table
-    over the mixed stream, so per-lane entropy systematically undershoots
-    what zlib can reach on high-entropy mantissas; the pooled histogram is
-    the honest Huffman-literal bound.
+def _pooled_byte_hist(words, lanes: int = 8):
+    """256-bin histogram of the POOLED byte stream (all byte positions in
+    one table).  DEFLATE codes literals with a single Huffman table over
+    the mixed stream, so per-lane entropy systematically undershoots what
+    zlib can reach on high-entropy mantissas; the pooled histogram is the
+    honest Huffman-literal bound.
 
     ``lanes`` = real bytes per value: uint64-zero-extended f32/bf16 words
     must not count their padding bytes (zlib never sees them)."""
-    nbytes = jnp.float64(words.shape[0] * lanes)
     sh = jnp.arange(lanes, dtype=jnp.uint64) * jnp.uint64(8)
     by = ((words[:, None] >> sh[None, :]) & jnp.uint64(0xFF)).astype(jnp.int32)
-    hist = jnp.bincount(by.reshape(-1), length=256).astype(jnp.float64)
-    p = hist / nbytes
-    pe = jnp.where(p > 0, p, 1.0)
-    return nbytes * -(pe * jnp.log2(pe)).sum()
+    return jnp.bincount(by.reshape(-1), length=256)
 
 
 @functools.partial(jax.jit, static_argnames=("lanes",))
@@ -98,10 +118,15 @@ def _estimate_words(words, lanes: int = 8):
     only (LZ77 matching can beat it on repeats).  The tighter (larger) bound
     is the better size predictor — measured on the test corpus it ranks
     candidates the way full zlib does, where either model alone inverts the
-    shift&save-evenness family's D ordering."""
+    shift&save-evenness family's D ordering.
+
+    The entropy finalization is THE shared implementation
+    (``scoregrid.ops.finalize_bits_grid``) consumed by both this per-family
+    estimator and the stacked grid — the bitwise winner-parity contract
+    rests on there being exactly one copy of the formula."""
     ones, transitions, _ = plane_stats_u64(words)
-    plane = _estimate_bits_from_stats(ones, transitions, words.shape[0])
-    return jnp.maximum(plane, _pooled_byte_bits(words, lanes))
+    hist = _pooled_byte_hist(words, lanes)
+    return finalize_bits_grid(ones, transitions, hist, words.shape[0], lanes)
 
 
 def estimate_stream_bits(words) -> float:
@@ -133,6 +158,7 @@ def fetch_scores(scores: list[CandidateScore]) -> None:
     if not pending:
         return
     vals = jax.device_get([s._dev for s in pending])
+    PHASE1.device_gets += 1
     for s, v in zip(pending, vals):
         v = np.atleast_1d(np.asarray(v, np.float64))
         s.est_bytes = float(v[0]) / 8.0
@@ -144,10 +170,10 @@ def fetch_scores(scores: list[CandidateScore]) -> None:
 
 
 # ---------------------------------------------------------------------------
-# fused per-family candidate scorers (§Perf: the whole candidate grid runs
-# with ZERO per-candidate host round-trips — transform arithmetic,
-# feasibility verdict, size estimate and metadata estimate all stay on
-# device; the engine fetches every candidate's triple in one device_get)
+# family builders: forward arithmetic + metadata model + feasibility verdict
+# as traceable functions returning (words_u64, fixed_meta_bits,
+# per_sample_meta_bits, valid).  The per-family jits below and the stacked
+# grid jit both consume these, so the two engines can never drift.
 # ---------------------------------------------------------------------------
 
 def _bit_length(v):
@@ -156,26 +182,17 @@ def _bit_length(v):
     return jnp.where(v > 0, jnp.floor(jnp.log2(vf)) + 1.0, 0.0)
 
 
-def _score_lanes(Xt, off, meta_fixed_bits, meta_persample_bits, valid, spec):
-    """[data_bits, fixed_meta_bits, per_sample_meta_bits, valid] — the
-    per-sample lane is scaled by n_full/n_sample on the host, the fixed
-    lane is not."""
+def _candidate_words(Xt, off, spec: FloatSpec):
+    """Compose a candidate's (significands, binade offsets) into the uint64
+    word stream the analytic estimator consumes."""
     from .lossless import from_significand_int
 
     vals = from_significand_int(Xt, jnp.asarray(off, jnp.int32), spec)
-    w = to_bits(vals, spec).astype(jnp.uint64)
-    return jnp.stack([
-        _estimate_words(w, lanes=spec.width // 8),
-        jnp.asarray(meta_fixed_bits, jnp.float64),
-        jnp.asarray(meta_persample_bits, jnp.float64),
-        valid.astype(jnp.float64),
-    ])
+    return to_bits(vals, spec).astype(jnp.uint64)
 
 
-@functools.partial(jax.jit, static_argnames=("spec",))
-def _sse_score(X, x_min, w_eff, top, spec: FloatSpec):
-    """shift&save-evenness: fused forward (the transform's own `_sse_core`,
-    inlined by the nested jit) + size estimate + metadata model
+def _sse_build(X, x_min, w_eff, top, spec: FloatSpec):
+    """shift&save-evenness: the transform's own `_sse_core` + metadata model
     (zigzag-delta chunk-id width + 1 evenness bit per sample)."""
     from . import transforms as T
 
@@ -185,32 +202,57 @@ def _sse_score(X, x_min, w_eff, top, spec: FloatSpec):
     zz_max = 2 * jnp.max(jnp.abs(jnp.diff(j)), initial=jnp.int64(0))
     w_dense = jnp.maximum(_bit_length(j_max), 1.0)
     w = jnp.minimum(jnp.maximum(_bit_length(zz_max), 1.0), w_dense)
-    return _score_lanes(Y, off, 128.0 + 64.0, n * (w + 1.0),
-                        jnp.bool_(True), spec)
+    return (_candidate_words(Y, off, spec), 128.0 + 64.0, n * (w + 1.0),
+            jnp.bool_(True))
 
 
-@functools.partial(jax.jit, static_argnames=("max_iter", "spec"))
-def _ms_score(X, a1, a_const, thresh, max_iter: int, spec: FloatSpec):
-    """multiply&shift: fused §3.2 loop + size estimate; the convergence
-    verdict rides along as the `valid` lane instead of a host sync."""
+def _ms_build(X, a1, a_const, thresh, max_iter: int, spec: FloatSpec):
+    """multiply&shift: fused §3.2 loop; the convergence verdict rides along
+    as the `valid` lane instead of a host sync."""
     from . import transforms as T
 
     Xf, off, active = T._ms_loop(X, a1, a_const, thresh, max_iter)
-    return _score_lanes(Xf, off, 128.0 + 64.0, 0.0, ~jnp.any(active), spec)
+    return _candidate_words(Xf, off, spec), 128.0 + 64.0, 0.0, ~jnp.any(active)
 
 
-@functools.partial(jax.jit, static_argnames=("spec",))
-def _ss_score(X, a_align, Ae, Ao, thresh_cap, spec: FloatSpec):
-    """shift&separate: fused scan over the precomputed schedule."""
-    from . import transforms as T
+def _ss_loop_masked(Xc, Ae, Ao, enabled, thresh_cap):
+    """``transforms._ss_loop`` with a per-step validity lane.
 
-    Xf, off, any_active, _ = T._ss_loop(X + a_align, Ae, Ao, thresh_cap)
-    return _score_lanes(Xf, off, 128.0 + 128.0, 0.0, ~any_active, spec)
+    The schedule length is data-dependent (derived from the sample
+    extrema), and anything data-dependent in the stacked grid's static plan
+    would re-trace and re-compile the WHOLE grid per distinct span.  The
+    scorers therefore scan a schedule padded to the candidate's static
+    ``max_iter`` with disabled tail steps — integer-exact no-ops (a
+    disabled step leaves X and the offsets untouched, and every
+    still-active element satisfies ``X < thresh_cap`` after the last real
+    step, so the active mask is preserved too)."""
+
+    def step(carry, a):
+        X, off, active = carry
+        ae, ao, en = a
+        A = jnp.where((X & 1).astype(bool), ao, ae)
+        Y = (X + A) >> 1
+        act = active & en
+        Xn = jnp.where(act, Y, X)
+        offn = off + act.astype(jnp.int32)
+        return (Xn, offn, active & (Xn < thresh_cap)), None
+
+    init = (Xc, jnp.zeros(Xc.shape, jnp.int32), jnp.ones(Xc.shape, bool))
+    (Xf, off, active), _ = lax.scan(step, init, (Ae, Ao, enabled))
+    return Xf, off, jnp.any(active)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "spec"))
-def _cb_score(X, k: int, spec: FloatSpec):
-    """compact bins: the transform's own fused `_cb_core` + size estimate.
+def _ss_build(X, a_align, Ae, Ao, enabled, thresh_cap, spec: FloatSpec):
+    """shift&separate: fused masked scan over the padded schedule."""
+    Xf, off, any_active = _ss_loop_masked(
+        X + a_align, Ae, Ao, enabled, thresh_cap
+    )
+    return (_candidate_words(Xf, off, spec), 128.0 + 128.0, 0.0,
+            ~any_active)
+
+
+def _cb_build(X, k: int, spec: FloatSpec):
+    """compact bins: the transform's own fused `_cb_core`.
 
     The bins-don't-fit check becomes the `valid` lane.  Metadata modelled
     as raw (unpacked) shift + threshold words — an upper bound that only
@@ -220,56 +262,259 @@ def _cb_score(X, k: int, spec: FloatSpec):
 
     Xt, _shifts, _new_lo, fits = T._cb_core(X, k=k, l=spec.man_bits)
     off = jnp.zeros(X.shape, jnp.int32)
-    return _score_lanes(Xt, off, 128.0 + 64.0 * (2 * k - 1), 0.0, fits, spec)
+    return (_candidate_words(Xt, off, spec), 128.0 + 64.0 * (2 * k - 1), 0.0,
+            fits)
 
 
-def score_candidate(name: str, p: dict, X, spec: FloatSpec, extrema,
-                    full_n: int | None = None):
-    """Dispatch one (transform, params) candidate onto its fused scorer.
+def _stack_lanes(words, meta_fixed_bits, meta_persample_bits, valid, spec):
+    """[data_bits, fixed_meta_bits, per_sample_meta_bits, valid] — the
+    per-sample lane is scaled by n_full/n_sample on the host, the fixed
+    lane is not."""
+    return jnp.stack([
+        _estimate_words(words, lanes=spec.width // 8),
+        jnp.asarray(meta_fixed_bits, jnp.float64),
+        jnp.asarray(meta_persample_bits, jnp.float64),
+        valid.astype(jnp.float64),
+    ])
 
-    Host side does only the cheap schedule/feasibility arithmetic (from the
-    shared sample extrema — no device syncs); returns a device lane vector
-    for `fetch_scores`, None when the transform has no fused scorer (the
-    engine then falls back to the generic forward + `score_significands`),
-    or the string ``"defer"`` when the candidate is valid on the full array
+
+# ---------------------------------------------------------------------------
+# per-family fused scorers (§Perf, PR 1: each candidate runs with ZERO
+# per-candidate host round-trips; the engine fetches every candidate's lane
+# vector in one device_get).  Kept as the A/B flag + stacked-parity oracle.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _sse_score(X, x_min, w_eff, top, spec: FloatSpec):
+    return _stack_lanes(*_sse_build(X, x_min, w_eff, top, spec), spec)
+
+
+@functools.partial(jax.jit, static_argnames=("max_iter", "spec"))
+def _ms_score(X, a1, a_const, thresh, max_iter: int, spec: FloatSpec):
+    return _stack_lanes(*_ms_build(X, a1, a_const, thresh, max_iter, spec),
+                        spec)
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _ss_score(X, a_align, Ae, Ao, enabled, thresh_cap, spec: FloatSpec):
+    return _stack_lanes(
+        *_ss_build(X, a_align, Ae, Ao, enabled, thresh_cap, spec), spec
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k", "spec"))
+def _cb_score(X, k: int, spec: FloatSpec):
+    return _stack_lanes(*_cb_build(X, k, spec), spec)
+
+
+# ---------------------------------------------------------------------------
+# candidate planning (host side): schedule/feasibility arithmetic from the
+# shared sample extrema — no device syncs; single source of truth for both
+# engines
+# ---------------------------------------------------------------------------
+
+def _plan_candidate(name: str, p: dict, spec: FloatSpec, extrema,
+                    n_sample: int, full_n: int):
+    """Host-side plan for one (transform, params) candidate.
+
+    Returns ``("grid", entry, dyn)`` where ``entry`` is the hashable static
+    piece (family tag + static schedule params) and ``dyn`` the dynamic
+    operands, ``("defer",)`` when the candidate is valid on the full array
     but cannot be evaluated on the sample (e.g. compact_bins with more bins
-    than sample elements) — the engine then tries it unscored in phase 2.
-    Raises TransformError for infeasibility on the FULL array."""
+    than sample elements), or ``("generic",)`` for transforms without a
+    fused builder.  Raises TransformError for infeasibility on the FULL
+    array."""
     from . import transforms as T
 
     l = spec.man_bits
     x_min, x_max = int(extrema[0]), int(extrema[1])
     if name == "shift_save_even":
         w_eff = T._sse_feasible(int(p["D"]), spec)
-        # plain ints / numpy arrays go straight into the jit call — no eager
-        # device_put dispatches (they cost ~0.3ms each, x4 per candidate)
-        return _sse_score(X, x_min, w_eff, 1 << (l + 1), spec=spec)
+        return ("grid", ("sse", w_eff, 1 << (l + 1)), ())
     if name == "multiply_shift":
         max_iter = int(p.get("max_iter", 4096))
         a1, a_const, thresh = T._ms_feasible(
             int(p["D"]), x_min, x_max, max_iter, spec
         )
-        return _ms_score(X, np.int64(a1), np.int64(a_const),
-                         np.int64(thresh), max_iter=max_iter, spec=spec)
+        # plain numpy scalars go straight into the jit call — no eager
+        # device_put dispatches (they cost ~0.3ms each, x4 per candidate)
+        return ("grid", ("ms", max_iter),
+                (np.int64(a1), np.int64(a_const), np.int64(thresh)))
     if name == "shift_separate":
         max_iter = int(p.get("max_iter", 64))
         a_align, cap, sched = T._ss_feasible(
             int(p["D"]), x_min, x_max, max_iter, spec
         )
         ok = [(ae, ao) for ae, ao, _t, is_ok in sched if is_ok]
-        return _ss_score(
-            X, np.int64(a_align),
-            np.asarray([a for a, _ in ok], np.int64),
-            np.asarray([a for _, a in ok], np.int64),
-            np.int64(cap), spec=spec,
-        )
+        # schedule padded to the STATIC max_iter with disabled tail steps:
+        # its data-dependent length must not leak into the grid plan (a
+        # distinct plan re-compiles the whole stacked jit)
+        Ae = np.zeros(max_iter, np.int64)
+        Ao = np.zeros(max_iter, np.int64)
+        enabled = np.zeros(max_iter, bool)
+        Ae[: len(ok)] = [a for a, _ in ok]
+        Ao[: len(ok)] = [a for _, a in ok]
+        enabled[: len(ok)] = True
+        return ("grid", ("ss", max_iter),
+                (np.int64(a_align), Ae, Ao, enabled, np.int64(cap)))
     if name == "compact_bins":
         k = int(p["n_bins"])
         if k < 1:
             raise T.TransformError("n_bins must be >= 1")
-        if k > (int(X.shape[0]) if full_n is None else int(full_n)):
+        if k > full_n:
             raise T.TransformError("n_bins exceeds dataset size")
-        if k > int(X.shape[0]):
-            return "defer"  # feasible on full data, unscorable on the sample
-        return _cb_score(X, k=k, spec=spec)
-    return None
+        if k > n_sample:
+            return ("defer",)  # feasible on full data, unscorable on sample
+        return ("grid", ("cb", k), ())
+    return ("generic",)
+
+
+def score_candidate(name: str, p: dict, X, spec: FloatSpec, extrema,
+                    full_n: int | None = None):
+    """Dispatch one (transform, params) candidate onto its fused per-family
+    scorer (the ``perfamily`` engine).
+
+    Returns a device lane vector for `fetch_scores`, None when the transform
+    has no fused scorer (the engine then falls back to the generic forward +
+    `score_significands`), or the string ``"defer"`` when the candidate must
+    be tried unscored in phase 2.  Raises TransformError for infeasibility
+    on the FULL array."""
+    n_sample = int(X.shape[0])
+    plan = _plan_candidate(
+        name, p, spec, extrema,
+        n_sample, n_sample if full_n is None else int(full_n),
+    )
+    if plan[0] == "defer":
+        return "defer"
+    if plan[0] == "generic":
+        return None
+    entry, dyn = plan[1], plan[2]
+    fam = entry[0]
+    PHASE1.dispatches += 1
+    if fam == "sse":
+        return _sse_score(X, int(extrema[0]), entry[1], entry[2], spec=spec)
+    if fam == "ms":
+        a1, a_const, thresh = dyn
+        return _ms_score(X, a1, a_const, thresh, max_iter=entry[1], spec=spec)
+    if fam == "ss":
+        a_align, Ae, Ao, enabled, cap = dyn
+        return _ss_score(X, a_align, Ae, Ao, enabled, cap, spec=spec)
+    return _cb_score(X, k=entry[1], spec=spec)
+
+
+# ---------------------------------------------------------------------------
+# stacked engine: the WHOLE candidate grid in one dispatch + one device_get
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("spec", "plan"))
+def _grid_score(Xs, x_min, dyn, spec: FloatSpec, plan: tuple):
+    """ONE device dispatch for the whole candidate grid.
+
+    Every planned family's forward arithmetic runs on the shared sample,
+    the transformed streams stack into a ``[n_candidates, n]`` uint64 word
+    grid, and the fused bit-statistics estimator (``kernels/scoregrid``:
+    per-plane run model + pooled byte-entropy accumulation) scores all rows
+    together.  Returns float64[n_candidates, 4] lanes
+    ``[data_bits, fixed_meta_bits, per_sample_meta_bits, valid]``."""
+    words, fixed, psamp, valid = [], [], [], []
+    for entry, d in zip(plan, dyn):
+        fam = entry[0]
+        if fam == "sse":
+            built = _sse_build(Xs, x_min, entry[1], entry[2], spec)
+        elif fam == "ms":
+            a1, a_const, thresh = d
+            built = _ms_build(Xs, a1, a_const, thresh, entry[1], spec)
+        elif fam == "ss":
+            a_align, Ae, Ao, enabled, cap = d
+            built = _ss_build(Xs, a_align, Ae, Ao, enabled, cap, spec)
+        else:
+            built = _cb_build(Xs, entry[1], spec)
+        w, f, s_, v = built
+        words.append(w)
+        fixed.append(jnp.asarray(f, jnp.float64))
+        psamp.append(jnp.asarray(s_, jnp.float64))
+        valid.append(jnp.asarray(v).astype(jnp.float64))
+    est = estimate_bits_grid(
+        jnp.stack(words), lanes=spec.width // 8,
+        use_pallas=_USE_PALLAS_GRID, interpret=INTERPRET_DEFAULT,
+    )
+    return jnp.stack(
+        [est, jnp.stack(fixed), jnp.stack(psamp), jnp.stack(valid)], axis=1
+    )
+
+
+def score_candidates_stacked(candidates, Xs, spec: FloatSpec, extrema,
+                             full_n: int, generic_score_fn=None):
+    """Score every candidate with ONE stacked jit dispatch and ONE
+    ``device_get``.
+
+    Grid-able candidates (the four built-in families) run inside the single
+    :func:`_grid_score` dispatch; a transform without a fused builder is
+    scored through ``generic_score_fn(name, params)`` (its own dispatch,
+    returning a :class:`CandidateScore` with a pending ``_dev`` estimate, or
+    None when the forward rejects) and its handle is resolved in the SAME
+    ``device_get`` as the grid — the single-fetch invariant holds for every
+    candidate mix.  With no ``generic_score_fn``, builder-less candidates
+    are skipped.
+
+    Returns ``(scores, deferred)``: fully resolved scores in candidate
+    order, plus the candidates that must be tried unscored in phase 2."""
+    from . import transforms as T
+
+    entries: list[tuple] = []          # ("grid", name, p) | ("generic", score)
+    plan, dyn = [], []
+    deferred: list[tuple[str, dict]] = []
+    n_sample = int(Xs.shape[0])
+    for name, p in candidates:
+        if name == "identity":
+            continue
+        try:
+            cand = _plan_candidate(name, p, spec, extrema, n_sample, full_n)
+        except T.TransformError:
+            continue
+        if cand[0] == "defer":
+            deferred.append((name, p))
+        elif cand[0] == "generic":
+            if generic_score_fn is None:
+                continue
+            s = generic_score_fn(name, p)
+            if s is not None:
+                entries.append(("generic", s))
+        else:
+            plan.append(cand[1])
+            dyn.append(cand[2])
+            entries.append(("grid", name, p))
+    pending = [e[1] for e in entries if e[0] == "generic"]
+    handles = [s._dev for s in pending]
+    if plan:
+        out = _grid_score(Xs, int(extrema[0]), tuple(dyn),
+                          spec=spec, plan=tuple(plan))
+        PHASE1.dispatches += 1
+    else:
+        out = np.zeros((0, 4), np.float64)
+    if plan or handles:
+        mat, vals = jax.device_get((out, handles))
+        PHASE1.device_gets += 1
+    else:
+        mat, vals = out, []
+    mat = np.asarray(mat, np.float64)
+    scores: list[CandidateScore] = []
+    ri = gi = 0
+    for e in entries:
+        if e[0] == "grid":
+            row = mat[ri]
+            ri += 1
+            scores.append(CandidateScore(
+                name=e[1], params=e[2],
+                est_bytes=float(row[0]) / 8.0,
+                meta_bytes=float(row[1]) / 8.0,
+                per_sample_bytes=float(row[2]) / 8.0,
+                valid=bool(row[3] > 0.5),
+            ))
+        else:
+            s = e[1]
+            s.est_bytes = float(np.asarray(vals[gi], np.float64)) / 8.0
+            s._dev = None
+            gi += 1
+            scores.append(s)
+    return scores, deferred

@@ -11,10 +11,8 @@ training path gets its collectives from GSPMD, whose choices the roofline
 """
 from __future__ import annotations
 
-import functools
 
 import jax
-import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 

@@ -122,8 +122,6 @@ def plane_pack(x: jnp.ndarray, k_planes: int):
 
     planes = jnp.stack([plane(p) for p in range(k_planes)])  # (k, n/32)
     # exactness: every dropped plane constant?
-    dropped_and = w
-    dropped_or = w
     mask = jnp.uint32((1 << (32 - k_planes)) - 1)
     low = w & mask
     exact = jnp.all(low == low[0])

@@ -17,7 +17,6 @@ families use pod-DP in the dry-run.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -17,10 +17,8 @@ the scan-stacked (L, ...) layouts uniformly.
 from __future__ import annotations
 
 import re
-from typing import Any
 
 import jax
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from ..models.common import ModelConfig

@@ -8,15 +8,13 @@ Both return (fn, in_shardings, out_shardings) ready for jax.jit.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..models.registry import Model
-from ..optim import adamw_init, adamw_update
+from ..optim import adamw_update
 from .sharding import batch_specs, cache_specs, param_specs
 
 
@@ -30,7 +28,6 @@ def opt_specs_like(pspecs):
 
 
 def make_train_step(model: Model, mesh, *, lr=3e-4, fsdp=False, n_micro=1):
-    cfg = model.cfg
 
     def train_step(params, opt_m, opt_v, opt_step, batch):
         def loss_fn(p, b):
@@ -89,7 +86,6 @@ def shardings_for_train(model: Model, mesh, batch_shape, *, fsdp=False):
 
 
 def make_serve_step(model: Model, mesh):
-    cfg = model.cfg
 
     def serve_step(params, token, cache):
         logits, new_cache = model.decode_step(params, token, cache)

@@ -1,0 +1,92 @@
+"""Pallas kernel: fused bit-statistics for the stacked candidate scoring grid.
+
+Phase-1 of ``encode(method="auto")`` scores every (transform, parameter)
+candidate with ``max(bit-plane run model, pooled byte entropy)``
+(core/scoring.py).  Both models consume the same raw statistics of a
+candidate's transformed word stream:
+
+* per-plane set-bit counts   (``ones[p]``   — order-0 plane entropy),
+* per-plane flip counts      (``trans[p]``  — first-order run model),
+* the pooled byte histogram  (``hist[256]`` — Huffman-literal bound).
+
+This kernel gathers all three for EVERY candidate row of a stacked
+``[rows, n]`` uint32 word grid in one VMEM-resident pass: each grid step
+reduces an ``(ROWS, 128)`` tile of one candidate row into that row's
+``(4, 128)`` stats block (planes 0..31 lane-packed in rows 0-1, the 256-bin
+histogram in rows 2-3), accumulated across steps with the same
+same-output-block pattern as the ``sharedbits`` AND/OR kernel.  Transition
+counts need the predecessor of each word, which arrives as a second,
+one-element-shifted copy of the grid so every step stays purely blockwise
+(no cross-block carry state).
+
+uint64 streams are scored as two u32 rows (lo/hi lanes, TPU-native) and
+recombined by the ops layer.  Interpret mode on CPU; TPU is the compile
+target.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+ROWS = 8        # words-tile sublanes per grid step (int32 min tile height)
+OUT_ROWS = 4    # ones | transitions | hist[:128] | hist[128:]
+
+
+def _kernel(x_ref, xp_ref, out_ref):
+    i = pl.program_id(1)
+    x = x_ref[0]                      # (ROWS, 128) uint32
+    flips = x ^ xp_ref[0]
+
+    shifts = lax.broadcasted_iota(jnp.uint32, (ROWS, 128, 32), 2)
+    one = jnp.uint32(1)
+
+    def count(w):
+        return ((w[:, :, None] >> shifts) & one).sum((0, 1), dtype=jnp.int32)
+
+    ones = count(x)
+    trans = count(flips)
+
+    vals = lax.broadcasted_iota(jnp.int32, (ROWS, 128, 256), 2)
+    hist = jnp.zeros((256,), jnp.int32)
+    for b in range(4):
+        by = ((x >> jnp.uint32(8 * b)) & jnp.uint32(0xFF)).astype(jnp.int32)
+        hist = hist + (by[:, :, None] == vals).sum((0, 1), dtype=jnp.int32)
+
+    blk = jnp.zeros((OUT_ROWS, 128), jnp.int32)
+    blk = blk.at[0, :32].set(ones)
+    blk = blk.at[1, :32].set(trans)
+    blk = blk.at[2, :].set(hist[:128])
+    blk = blk.at[3, :].set(hist[128:])
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[0] = blk
+
+    @pl.when(i > 0)
+    def _acc():
+        out_ref[0] = out_ref[0] + blk
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def scoregrid_blocks(
+    x: jnp.ndarray, xprev: jnp.ndarray, interpret: bool = True
+) -> jnp.ndarray:
+    """x, xprev: uint32[rows, r, 128] with r % ROWS == 0 (xprev = x shifted by
+    one word within each row) -> int32[rows, 4, 128] stats blocks."""
+    rows, r, _ = x.shape
+    grid = (rows, r // ROWS)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, ROWS, 128), lambda c, i: (c, i, 0)),
+            pl.BlockSpec((1, ROWS, 128), lambda c, i: (c, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, OUT_ROWS, 128), lambda c, i: (c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, OUT_ROWS, 128), jnp.int32),
+        interpret=interpret,
+    )(x, xprev)

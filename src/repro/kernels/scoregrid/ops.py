@@ -1,0 +1,144 @@
+"""jit'd wrappers: stacked candidate-grid bit statistics and size estimates.
+
+``plane_byte_stats_grid`` produces, for every row of a ``[nc, n]`` uint64
+word grid, the integer statistics the analytic size model consumes (per-plane
+set-bit/flip counts + pooled byte histogram).  Two interchangeable backends
+produce EXACTLY the same integers:
+
+* ``use_pallas=False`` — batched jnp (XLA fuses it into the enclosing
+  stacked scoring jit; the CPU production path),
+* ``use_pallas=True``  — the ``scoregrid`` Pallas kernel (VMEM-resident
+  accumulation; interpret mode on CPU, compiled on TPU).
+
+``estimate_bits_grid`` applies the shared entropy finalization —
+``max(sum_p n*min(H0_p, Ht_p), pooled byte entropy)`` bits per row — the
+stacked twin of ``scoring._estimate_words``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ROWS, scoregrid_blocks
+
+_BLK = ROWS * 128  # words per grid step
+
+
+def _stats_grid_jnp(W: jnp.ndarray, lanes: int):
+    """Batched-jnp backend: uint64[nc, n] -> (ones, trans int32[nc, 64],
+    hist int32[nc, 256]).  Integer-exact, so interchangeable with the Pallas
+    backend and with the per-row ``sharedbits.plane_stats_u64``."""
+    nc, n = W.shape
+    shifts = jnp.arange(64, dtype=jnp.uint64)
+    one = jnp.uint64(1)
+    bits = (W[:, :, None] >> shifts[None, None, :]) & one
+    ones = bits.sum(axis=1, dtype=jnp.int32)
+    flips = W[:, 1:] ^ W[:, :-1]
+    tbits = (flips[:, :, None] >> shifts[None, None, :]) & one
+    trans = tbits.sum(axis=1, dtype=jnp.int32)
+
+    sh = jnp.arange(lanes, dtype=jnp.uint64) * jnp.uint64(8)
+    by = ((W[:, :, None] >> sh[None, None, :]) & jnp.uint64(0xFF)).astype(jnp.int32)
+    offs = (jnp.arange(nc, dtype=jnp.int32) * 256)[:, None, None]
+    hist = jnp.bincount(
+        (by + offs).reshape(-1), length=nc * 256
+    ).astype(jnp.int32).reshape(nc, 256)
+    return ones, trans, hist
+
+
+def _rows_u32(X: jnp.ndarray, n: int):
+    """Pad u32 rows to the block quantum and build the one-word-shifted copy
+    (zero padding: neutral for set-bit counts; the single pad-boundary flip
+    is zeroed explicitly so transition counts need no correction)."""
+    npad = -(-n // _BLK) * _BLK
+    Xp = jnp.zeros((X.shape[0], npad), jnp.uint32).at[:, :n].set(X)
+    prev = jnp.zeros_like(Xp).at[:, 1:].set(Xp[:, :-1]).at[:, 0].set(Xp[:, 0])
+    if n < npad:
+        prev = prev.at[:, n].set(jnp.uint32(0))
+    shape3 = (X.shape[0], npad // 128, 128)
+    return Xp.reshape(shape3), prev.reshape(shape3), npad
+
+
+def _stats_grid_pallas(W: jnp.ndarray, lanes: int, interpret: bool):
+    """Pallas backend: split u64 rows into u32 lo/hi lanes, run the kernel,
+    recombine.  Narrow specs (lanes <= 4) carry all information in the lo
+    lane — the hi planes are constant zero (cost 0 bits) and are skipped."""
+    nc, n = W.shape
+    lo = W.astype(jnp.uint32)
+    wide = lanes > 4
+    rows = jnp.concatenate([lo, (W >> jnp.uint64(32)).astype(jnp.uint32)], 0) \
+        if wide else lo
+    x3, prev3, npad = _rows_u32(rows, n)
+    out = scoregrid_blocks(x3, prev3, interpret=interpret)
+    ones32 = out[:, 0, :32]
+    trans32 = out[:, 1, :32]
+    hist = jnp.concatenate([out[:, 2, :], out[:, 3, :]], axis=-1)
+    # every u32 row counted 4 byte lanes; remove the zero padding (npad - n
+    # pad words) and, for sub-4-byte specs, the words' own zero-extension
+    # bytes -- both land in bin 0 with statically known counts
+    pad0 = 4 * (npad - n) + (0 if lanes >= 4 else (4 - lanes) * n)
+    hist = hist.at[:, 0].add(jnp.int32(-pad0))
+    if wide:
+        ones = jnp.concatenate([ones32[:nc], ones32[nc:]], axis=-1)
+        trans = jnp.concatenate([trans32[:nc], trans32[nc:]], axis=-1)
+        return ones, trans, hist[:nc] + hist[nc:]
+    zeros = jnp.zeros((nc, 32), jnp.int32)
+    ones = jnp.concatenate([ones32, zeros], axis=-1)
+    trans = jnp.concatenate([trans32, zeros], axis=-1)
+    return ones, trans, hist
+
+
+@functools.partial(
+    jax.jit, static_argnames=("lanes", "use_pallas", "interpret")
+)
+def plane_byte_stats_grid(
+    W: jnp.ndarray,
+    lanes: int = 8,
+    use_pallas: bool = False,
+    interpret: bool = True,
+):
+    """uint64[nc, n] -> (ones[nc, 64], trans[nc, 64], hist[nc, 256]), int32."""
+    if use_pallas:
+        return _stats_grid_pallas(W, lanes, interpret)
+    return _stats_grid_jnp(W, lanes)
+
+
+def finalize_bits_grid(ones, trans, hist, n: int, lanes: int) -> jnp.ndarray:
+    """Integer stats -> float64[nc] estimated stream bits (the same entropy
+    formulas as the per-family ``scoring._estimate_words``, batched)."""
+    nf = jnp.asarray(n, jnp.float64)
+
+    def h2(p):
+        p = jnp.clip(p, 1e-12, 1.0 - 1e-12)
+        return -(p * jnp.log2(p) + (1.0 - p) * jnp.log2(1.0 - p))
+
+    h0 = h2(ones.astype(jnp.float64) / nf)
+    ht = h2(trans.astype(jnp.float64) / jnp.maximum(nf - 1.0, 1.0))
+    per_plane = jnp.minimum(h0, ht)
+    constant = (ones == 0) | (ones == n)
+    per_plane = jnp.where(constant, 0.0, per_plane)
+    plane_bits = (nf * per_plane).sum(axis=-1)
+
+    nbytes = jnp.float64(n * lanes)
+    p = hist.astype(jnp.float64) / nbytes
+    pe = jnp.where(p > 0, p, 1.0)
+    byte_bits = nbytes * -(pe * jnp.log2(pe)).sum(axis=-1)
+    return jnp.maximum(plane_bits, byte_bits)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("lanes", "use_pallas", "interpret")
+)
+def estimate_bits_grid(
+    W: jnp.ndarray,
+    lanes: int = 8,
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """uint64[nc, n] word grid -> float64[nc] estimated compressed bits."""
+    ones, trans, hist = plane_byte_stats_grid(
+        W, lanes=lanes, use_pallas=use_pallas, interpret=interpret
+    )
+    return finalize_bits_grid(ones, trans, hist, W.shape[1], lanes)

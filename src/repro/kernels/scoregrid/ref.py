@@ -1,0 +1,28 @@
+"""Pure-numpy oracle for the scoregrid statistics (independent of jax)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def scoregrid_ref(W: np.ndarray, lanes: int = 8):
+    """uint64[nc, n] word grid -> (ones[nc, 64], trans[nc, 64], hist[nc, 256]).
+
+    ``lanes`` = real bytes per word (8 for f64, 4 for zero-extended f32
+    words, 2 for bf16): only those byte positions enter the histogram.
+    """
+    W = np.asarray(W, np.uint64)
+    nc, n = W.shape
+    ones = np.zeros((nc, 64), np.int64)
+    trans = np.zeros((nc, 64), np.int64)
+    hist = np.zeros((nc, 256), np.int64)
+    for c in range(nc):
+        w = W[c]
+        flips = w[1:] ^ w[:-1]
+        for p in range(64):
+            bit = (w >> np.uint64(p)) & np.uint64(1)
+            ones[c, p] = int(bit.sum())
+            trans[c, p] = int(((flips >> np.uint64(p)) & np.uint64(1)).sum())
+        for b in range(lanes):
+            by = ((w >> np.uint64(8 * b)) & np.uint64(0xFF)).astype(np.int64)
+            hist[c] += np.bincount(by, minlength=256)
+    return ones, trans, hist

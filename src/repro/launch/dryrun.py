@@ -22,7 +22,6 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ARCH_IDS, CLI_IDS, get_config
 from repro.distributed.steps import (

@@ -15,7 +15,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import CLI_IDS, get_config
-from repro.launch.mesh import make_local_mesh
 from repro.models import build_model
 
 

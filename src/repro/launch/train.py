@@ -22,7 +22,6 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import CLI_IDS, get_config
@@ -30,7 +29,6 @@ from repro.data.tokens import stream_for
 from repro.distributed.steps import make_train_step, shardings_for_train
 from repro.launch.mesh import make_local_mesh
 from repro.models import build_model
-from repro.optim import adamw_init, wsd_schedule
 
 
 def main(argv=None):

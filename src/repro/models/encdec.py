@@ -8,7 +8,6 @@ both — documented approximation with identical shapes/FLOPs).
 """
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +17,6 @@ from .layers import (
     attention_decode,
     attn_params,
     cross_attention,
-    cross_entropy,
     mlp,
     mlp_params,
     rmsnorm,
@@ -147,7 +145,6 @@ def prefill(params, batch, cfg: ModelConfig, max_len: int | None = None):
 
 
 def decode_step(params, token, cache, cfg: ModelConfig):
-    b = token.shape[0]
     pos = cache["pos"]
     posf = pos.astype(jnp.float32)
     d = cfg.d_model

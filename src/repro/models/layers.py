@@ -9,7 +9,6 @@ Conventions:
 from __future__ import annotations
 
 import math
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,6 @@ import jax
 import jax.numpy as jnp
 
 from .common import ModelConfig, dense_init
-from .layers import rmsnorm
 
 CHUNK = 64
 CONV_K = 4

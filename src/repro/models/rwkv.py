@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from .common import ModelConfig, dense_init, embed_init
-from .layers import cross_entropy, rmsnorm
+from .layers import rmsnorm
 
 LORA_R = 64
 CHUNK = 64

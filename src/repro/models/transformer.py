@@ -12,8 +12,6 @@ Interface (shared by all families via registry.build_model):
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +21,6 @@ from .layers import (
     attention,
     attention_decode,
     attn_params,
-    cross_entropy,
     mlp,
     mlp_params,
     rmsnorm,
@@ -166,7 +163,6 @@ def prefill(params, tokens, cfg: ModelConfig, max_len: int | None = None):
 
 def decode_step(params, token, cache, cfg: ModelConfig):
     """token: (B,) int32 -> (logits (B, V), new cache)."""
-    b = token.shape[0]
     x = params["embed"].astype(cfg.cdt)[token][:, None]  # (B, 1, D)
     pos = cache["pos"]
 

@@ -13,7 +13,6 @@ import jax.numpy as jnp
 
 from . import transformer as TF
 from .common import ModelConfig
-from .layers import cross_entropy
 
 
 def init(key, cfg: ModelConfig):
@@ -68,7 +67,6 @@ def prefill(params, batch, cfg: ModelConfig, max_len: int | None = None):
     )
     from .layers import _qkv, sdpa_auto
     from .layers import mlp, rmsnorm
-    from .moe import moe_ffn
 
     st = p + s
 

@@ -23,7 +23,6 @@ from .layers import (
     attention,
     attention_decode,
     attn_params,
-    cross_entropy,
     mlp,
     mlp_params,
     rmsnorm,
@@ -199,7 +198,6 @@ def prefill(params, tokens, cfg: ModelConfig, max_len: int | None = None):
 
 def decode_step(params, token, state, cfg: ModelConfig):
     n_apps, segs, tail = plan(cfg)
-    b = token.shape[0]
     x = params["embed"].astype(cfg.cdt)[token][:, None]
     pos = state["pos"]
     h = x

@@ -1,7 +1,6 @@
 """Checkpoint manager: bitwise round-trip, atomicity, retention, elasticity,
 and the data pipeline's O(1) resume."""
 import json
-import os
 from pathlib import Path
 
 import jax
@@ -178,7 +177,7 @@ def test_shard_store_roundtrip_and_random_access(tmp_path):
 
     store = ShardStore(tmp_path)
     x = gas_turbine_emissions(70000).reshape(7, 10000)
-    m = store.write("turbine", x, chunk=16384)
+    store.write("turbine", x, chunk=16384)
     back = store.read("turbine")
     assert np.array_equal(back.view(np.uint64), x.view(np.uint64))
     c1 = store.read_chunk("turbine", 1)

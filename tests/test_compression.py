@@ -5,7 +5,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.compression import (
-    bitplanes_to_words, compressed_size_bytes, delta_cr, evaluate,
+    bitplanes_to_words, compressed_size_bytes, evaluate,
     gd_compress, gd_decompress, gd_get, pack_uint_stream, shared_bit_mask,
     shared_bits_report, unpack_uint_stream, words_to_bitplanes,
 )

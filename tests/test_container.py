@@ -274,7 +274,6 @@ def test_bitflip_in_chunk_payload_is_caught():
 
 def test_bitflip_in_index_is_caught():
     buf, _ = _container_bytes()
-    r = ContainerReader(buf)
     idx_off = len(buf) - container.format.FOOTER_SIZE - 4
     bad = bytearray(buf)
     bad[idx_off] ^= 0x01

@@ -8,7 +8,6 @@ import textwrap
 from pathlib import Path
 
 import numpy as np
-import pytest
 
 REPO = Path(__file__).resolve().parents[1]
 

@@ -6,12 +6,11 @@ predicates used constructively by the transforms.
 """
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.float_bits import (
-    BF16, F32, F64, biased_exponent, from_bits, mantissa, normalize_to_binade,
-    denormalize_from_binade, pow2, scale_by_pow2, to_bits, ulp, unbiased_exponent,
+    F64, from_bits, normalize_to_binade,
+    denormalize_from_binade, pow2, scale_by_pow2, to_bits, ulp,
 )
 from repro.core.lossless import (
     add_is_exact, eq4_condition, mul_pow2_is_exact, same_evenness,

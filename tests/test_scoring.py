@@ -2,10 +2,12 @@
 pipeline two-phase selection): plane-stats correctness vs the numpy
 reference, estimator sanity, winner agreement with full-zlib scoring on the
 test corpus, selection safety (never ships a non-round-tripping candidate),
-and the `presample` infeasible-pick fallback."""
+the `presample` infeasible-pick fallback, and the stacked single-dispatch
+grid engine's bitwise parity with the per-family oracle."""
 import dataclasses
 import zlib
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -187,6 +189,153 @@ def test_high_passthrough_not_worse_than_identity():
     shipped = zfn(np.asarray(enc.data).tobytes()) + enc.metadata_bytes()
     noprep = zfn(x.tobytes()) + 16
     assert shipped <= noprep * 1.02 + 64, (enc.method, shipped, noprep)
+
+
+# ---------------------------------------------------------------------------
+# stacked single-dispatch grid engine vs the per-family oracle
+# ---------------------------------------------------------------------------
+
+# per-spec candidate lists that keep every transform family feasible (the
+# D-grids shrink with the mantissa width: bf16 has l=7, so the f64 defaults
+# would leave whole families infeasible and untested there)
+_GRID_CANDIDATES = {
+    "f64": pipeline.DEFAULT_CANDIDATES,
+    "f32": (
+        ("compact_bins", {"n_bins": 4}),
+        ("compact_bins", {"n_bins": 16}),
+        ("multiply_shift", {"D": 4}),
+        ("multiply_shift", {"D": 6}),
+        ("shift_separate", {"D": 2}),
+        ("shift_separate", {"D": 3}),
+        ("shift_save_even", {"D": 8}),
+        ("shift_save_even", {"D": 12}),
+    ),
+    "bf16": (
+        ("compact_bins", {"n_bins": 4}),
+        ("compact_bins", {"n_bins": 8}),
+        ("multiply_shift", {"D": 2}),
+        ("multiply_shift", {"D": 3}),
+        ("shift_separate", {"D": 2}),
+        ("shift_save_even", {"D": 2}),
+        ("shift_save_even", {"D": 4}),
+    ),
+}
+_GRID_DTYPES = {"f64": np.float64, "f32": np.float32, "bf16": jnp.bfloat16}
+
+
+def _perfamily_scores(candidates, Xs, spec, extrema, full_n):
+    out = []
+    for name, p in candidates:
+        if name == "identity":
+            continue
+        try:
+            dev = scoring.score_candidate(name, p, Xs, spec, extrema,
+                                          full_n=full_n)
+        except T.TransformError:
+            continue
+        if dev == "defer" or dev is None:
+            continue
+        out.append(scoring.CandidateScore(name=name, params=p, _dev=dev))
+    scoring.fetch_scores(out)
+    return out
+
+
+@pytest.mark.parametrize("spec_name", ["f64", "f32", "bf16"])
+def test_stacked_scores_bitwise_equal_perfamily(spec_name):
+    """The stacked grid must reproduce the per-family engine's phase-1 lanes
+    BITWISE — estimate, metadata model and feasibility verdict — for every
+    candidate family, in every float spec."""
+    if spec_name == "bf16":
+        # 7 mantissa bits: a full-binade stream leaves shift&separate
+        # infeasible everywhere, so use a narrow-span stream that keeps
+        # every family on the grid
+        rng = np.random.default_rng(0)
+        x = 1.0 + rng.integers(0, 12, 3000) / 128.0
+    else:
+        x = gas_turbine_emissions(3000)
+    prep = pipeline._prepare(jnp.asarray(x, _GRID_DTYPES[spec_name]))
+    Xs = pipeline._strided(prep.X, pipeline.DEFAULT_SAMPLE_ELEMS)
+    mn, mx = jax.device_get((jnp.min(Xs), jnp.max(Xs)))
+    extrema = (int(mn), int(mx))
+    candidates = _GRID_CANDIDATES[spec_name]
+
+    stacked, deferred = scoring.score_candidates_stacked(
+        candidates, Xs, prep.spec, extrema, full_n=prep.n_active
+    )
+    perfam = _perfamily_scores(candidates, Xs, prep.spec, extrema,
+                               prep.n_active)
+    assert [(s.name, s.params) for s in stacked] == \
+           [(s.name, s.params) for s in perfam]
+    # every family must actually be on the grid (else the parity is vacuous)
+    assert {s.name for s in stacked} == {
+        n for n, _ in candidates if n != "identity"
+    }
+    for a, b in zip(stacked, perfam):
+        tag = (a.name, str(a.params))
+        assert a.est_bytes == b.est_bytes, tag
+        assert a.meta_bytes == b.meta_bytes, tag
+        assert a.per_sample_bytes == b.per_sample_bytes, tag
+        assert a.valid == b.valid, tag
+
+
+def test_stacked_phase1_single_dispatch():
+    """Acceptance: phase-1 of encode(method='auto') issues exactly ONE
+    stacked jit dispatch and ONE device_get for the whole candidate grid
+    (the per-family engine issues one dispatch per candidate)."""
+    x = gas_turbine_emissions(50_000)
+    scoring.PHASE1.reset()
+    picked = pipeline.select_method(x)  # stacked is the default engine
+    assert scoring.PHASE1.dispatches == 1
+    assert scoring.PHASE1.device_gets == 1
+
+    scoring.PHASE1.reset()
+    picked_pf = pipeline.select_method(x, engine="perfamily")
+    assert picked_pf == picked
+    assert scoring.PHASE1.dispatches == 16  # one per non-identity candidate
+    assert scoring.PHASE1.device_gets == 1
+
+    # the full auto encode keeps the property (phase 2 adds no scoring cost)
+    scoring.PHASE1.reset()
+    enc = pipeline.encode(x)
+    assert scoring.PHASE1.dispatches == 1
+    assert scoring.PHASE1.device_gets == 1
+    assert np.array_equal(
+        pipeline.decode(enc).view(np.uint64), x.view(np.uint64)
+    )
+
+
+def test_stacked_winner_matches_perfamily_corpus():
+    """Acceptance: selected winners are identical between the stacked engine
+    and the per-family engine on the full test corpus."""
+    for x in _corpus():
+        got = pipeline.select_method(x, engine="stacked")
+        want = pipeline.select_method(x, engine="perfamily")
+        assert got == want, (got, want)
+
+
+def test_unknown_engine_rejected():
+    with pytest.raises(ValueError):
+        pipeline.select_method(gas_turbine_emissions(1000), engine="nope")
+
+
+def test_generic_candidate_keeps_single_fetch(monkeypatch):
+    """A candidate without a fused builder costs its own dispatch, but its
+    estimate handle must resolve inside the stacked engine's single
+    device_get (grid + generic = 2 dispatches, still 1 fetch)."""
+    def dummy_fwd(X, *, spec=None, extrema=None, **_):
+        return jnp.asarray(X, jnp.int64), jnp.zeros(jnp.shape(X), jnp.int32), None
+
+    def dummy_inv(Xt, offsets, meta, spec=None):
+        return jnp.asarray(Xt, jnp.int64)
+
+    monkeypatch.setitem(T.TRANSFORMS, "dummy_copy", (dummy_fwd, dummy_inv))
+    x = gas_turbine_emissions(3000)
+    candidates = (("shift_save_even", {"D": 8}), ("dummy_copy", {}))
+    scoring.PHASE1.reset()
+    name, _p = pipeline.select_method(x, candidates=candidates)
+    assert name in ("shift_save_even", "dummy_copy")
+    assert scoring.PHASE1.dispatches == 2
+    assert scoring.PHASE1.device_gets == 1
 
 
 # ---------------------------------------------------------------------------

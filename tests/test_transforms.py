@@ -6,7 +6,6 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import transforms as T
 from repro.core.float_bits import F32, F64
-from repro.core.lossless import from_significand_int
 from repro.core import pipeline
 
 L = F64.man_bits
