@@ -110,6 +110,14 @@ def bench_transforms(rows: list, n_elems: int = 100_000):
         pipeline.select_method(x, engine=eng)
         _counts[f"phase1_dispatches_{eng}"] = scoring.PHASE1.dispatches
         _counts[f"phase1_device_gets_{eng}"] = scoring.PHASE1.device_gets
+        # finalist exact re-scoring must cost 0 forwards on the stacked
+        # engine (grid-stream reuse); probe = the sse metadata tie-break
+        _counts[f"phase1_finalist_dispatches_{eng}"] = (
+            scoring.PHASE1.finalist_dispatches
+        )
+        _counts[f"phase1_probe_dispatches_{eng}"] = (
+            scoring.PHASE1.probe_dispatches
+        )
         us = _timeit(lambda: pipeline.select_method(x, engine=eng), n=10)
         _record(rows, f"select_auto_{tag}_{eng}", us,
                 f"dispatches={_counts[f'phase1_dispatches_{eng}']}", x.nbytes)
@@ -222,6 +230,27 @@ def bench_shard_prefetch(rows: list, n_elems: int = 100_000):
                 f"prefetch=4 lazy={us_lazy / 1e3:.1f}ms", x.nbytes)
 
 
+def bench_rans(rows: list, n_elems: int = 100_000):
+    """The rANS entropy-coder backend on the raw float byte stream: encode
+    (host lane loop + statistics pass) and decode (lockstep lane loop)
+    throughput, with zlib as the ratio yardstick."""
+    import zlib
+
+    from repro.kernels.rans import ops as rans_ops
+
+    tag = f"{n_elems // 1000}k"
+    data = gas_turbine_emissions(n_elems).tobytes()
+    comp = rans_ops.compress(data)
+    zl = len(zlib.compress(data, 6))
+    us = _timeit(lambda: rans_ops.compress(data))
+    _record(rows, f"rans_encode_{tag}", us,
+            f"ratio={len(comp) / len(data):.3f} zlib={zl / len(data):.3f}",
+            len(data))
+    assert rans_ops.decompress(comp) == data
+    us = _timeit(lambda: rans_ops.decompress(comp))
+    _record(rows, f"rans_decode_{tag}", us, "bitwise", len(data))
+
+
 def bench_gd(rows: list):
     x = gas_turbine_emissions(10_000)
     us = _timeit(lambda: gd_compress(x))
@@ -306,12 +335,14 @@ def run(rows: list, smoke: bool = False):
         bench_transforms(rows, n_elems=10_000)
         bench_container(rows, n_elems=10_000)
         bench_shard_prefetch(rows, n_elems=10_000)
+        bench_rans(rows, n_elems=10_000)
         bench_gd(rows)
         bench_kernels(rows)
     else:
         bench_transforms(rows)
         bench_container(rows)
         bench_shard_prefetch(rows)
+        bench_rans(rows)
         bench_gd(rows)
         bench_kernels(rows)
         bench_checkpoint(rows)

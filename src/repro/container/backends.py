@@ -28,20 +28,27 @@ class Backend:
     # up front, so a crafted record can't expand into a decompression bomb.
     # Plugins without one fall back to plain decompress (post-hoc checked).
     decompress_capped: Callable[[bytes, int], bytes] | None = None
+    # decompress_into(buf, out) -> true plaintext length, writing directly
+    # into the caller's preallocated buffer (never past its end).  Parallel
+    # container reads use it to decode straight into the output array
+    # instead of assembling intermediate bytes per chunk under the GIL.
+    # A returned length != len(out) signals a mismatch (caller raises).
+    decompress_into: Callable[[bytes, memoryview], int] | None = None
 
 
 _REGISTRY: dict[str, Backend] = {}
 
 
 def register_backend(name: str, compress, decompress,
-                     decompress_capped=None) -> None:
+                     decompress_capped=None, decompress_into=None) -> None:
     """Register (or replace) a byte-stream compressor under ``name``.
 
     ``name`` must be short ASCII (it is stored verbatim in the header).
     """
     if not name or len(name) > 32 or not name.isascii():
         raise ContainerError(f"backend name must be short ASCII, got {name!r}")
-    _REGISTRY[name] = Backend(name, compress, decompress, decompress_capped)
+    _REGISTRY[name] = Backend(name, compress, decompress, decompress_capped,
+                              decompress_into)
 
 
 def get_backend(name: str) -> Backend:
@@ -75,8 +82,30 @@ def zlib_decompress_capped(buf: bytes, max_out: int) -> bytes:
     return d.decompress(buf, max(int(max_out), 0) + 1)
 
 
+def zlib_decompress_into(buf: bytes, out) -> int:
+    """DEFLATE-decompress directly into ``out`` via ``decompressobj``
+    chunks: bounded memory, never writes past the buffer, and returns the
+    true plaintext length (> len(out) flags an oversized stream)."""
+    mv = memoryview(out).cast("B")
+    d = zlib.decompressobj()
+    pos = 0
+    data = buf
+    while data:
+        chunk = d.decompress(data, len(mv) - pos + 1)
+        take = min(len(chunk), len(mv) - pos)
+        mv[pos : pos + take] = chunk[:take]
+        pos += len(chunk)
+        if pos > len(mv):
+            return pos          # oversized: caller reports the mismatch
+        data = d.unconsumed_tail
+    tail = d.flush()
+    take = min(len(tail), len(mv) - pos)
+    mv[pos : pos + take] = tail[:take]
+    return pos + len(tail)
+
+
 register_backend("zlib", lambda b: zlib.compress(b, 6), zlib.decompress,
-                 zlib_decompress_capped)
+                 zlib_decompress_capped, zlib_decompress_into)
 
 try:  # optional: zstd when the wheel is present (never a hard dependency)
     import zstandard as _zstd
@@ -94,9 +123,81 @@ if _zstd is not None:
         except _zstd.ZstdError as e:
             raise ContainerError(f"zstd payload rejected: {e}")
 
+    def _zstd_decompress_into(buf: bytes, out) -> int:
+        import io as _io
+
+        mv = memoryview(out).cast("B")
+        try:
+            r = _zstd.ZstdDecompressor().stream_reader(_io.BytesIO(buf))
+            pos = 0
+            while pos < len(mv):
+                k = r.readinto(mv[pos:])
+                if not k:
+                    break
+                pos += k
+            # anything still pending past the buffer is an oversize signal
+            if pos >= len(mv) and r.read(1):
+                return pos + 1
+            return pos
+        except _zstd.ZstdError as e:
+            raise ContainerError(f"zstd payload rejected: {e}")
+
     register_backend(
         "zstd",
         lambda b: _zstd.ZstdCompressor(level=10).compress(b),
         lambda b: _zstd.ZstdDecompressor().decompress(b),
         _zstd_decompress_capped,
+        _zstd_decompress_into,
     )
+
+
+# -- rans: the device-resident entropy coder (src/repro/kernels/rans) -------
+#
+# Always registered: the numpy reference coder has no dependency beyond
+# numpy, and the ops layer moves the statistics/decode stages on device when
+# a TPU is present.  Imports stay inside the callables so merely importing
+# the registry never pulls the kernels package.
+
+def _rans_errors(fn):
+    """Map the coder's RansError onto the registry's error surface so
+    readers report frame corruption as container corruption."""
+    def call(*args):
+        from ..kernels.rans.ref import RansError
+
+        try:
+            return fn(*args)
+        except RansError as e:
+            raise ContainerError(f"rans payload rejected: {e}")
+    return call
+
+
+@_rans_errors
+def _rans_compress(buf: bytes) -> bytes:
+    from ..kernels.rans import ops as _rans
+
+    return _rans.compress(buf)
+
+
+@_rans_errors
+def _rans_decompress(buf: bytes) -> bytes:
+    from ..kernels.rans import ops as _rans
+
+    return _rans.decompress(buf)
+
+
+@_rans_errors
+def _rans_decompress_capped(buf: bytes, max_out: int) -> bytes:
+    from ..kernels.rans import ops as _rans
+
+    return _rans.decompress_capped(buf, max_out)
+
+
+@_rans_errors
+def _rans_decompress_into(buf: bytes, out) -> int:
+    from ..kernels.rans import ops as _rans
+
+    return _rans.decompress_into(buf, out)
+
+
+register_backend("rans", _rans_compress, _rans_decompress,
+                 _rans_decompress_capped, _rans_decompress_into)

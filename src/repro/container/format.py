@@ -416,6 +416,93 @@ def serialize_raw_chunk(arr: np.ndarray, backend: str | Backend = "zlib") -> byt
     return bytes(b)
 
 
+def _decompress_into_exact(be: Backend, buf: bytes, out) -> None:
+    """Backend-decompress an untrusted payload straight into ``out`` (whose
+    length is the expected plaintext size).  Uses the backend's
+    ``decompress_into`` slot when present — no intermediate plaintext
+    allocation — else the capped path plus one copy."""
+    mv = memoryview(out).cast("B")
+    if be.decompress_into is not None:
+        got = be.decompress_into(buf, mv)
+        if got != len(mv):
+            raise ContainerFormatError(
+                f"chunk payload decompressed to {got}+ bytes, header "
+                f"implies {len(mv)}"
+            )
+    else:
+        mv[:] = _decompress_exact(be, buf, len(mv))
+
+
+def deserialize_chunk_into(
+    buf: bytes,
+    backend: str | Backend,
+    out: np.ndarray,
+    spec_name: str | None = None,
+    dtype: np.dtype | str | None = None,
+):
+    """Decode one record directly into ``out`` (a flat array slice) when the
+    record needs no inverse transform — RAW records and identity transform
+    records, whose payload *is* the output bytes.  Returns ``None`` on
+    success; any other record returns the regular
+    :func:`deserialize_chunk` result for the caller to decode and copy.
+
+    Same trust model as :func:`deserialize_chunk`: CRC first, every length
+    cross-checked against ``out`` (which the caller sizes from the container
+    index), loud :class:`ContainerFormatError` on any disagreement."""
+    if len(buf) < 4:
+        raise ContainerFormatError("truncated chunk record")
+    body, (crc,) = buf[:-4], struct.unpack("<I", buf[-4:])
+    if zlib.crc32(body) != crc:
+        raise ChecksumError(
+            "chunk checksum mismatch: record corrupt or truncated"
+        )
+    method_id = body[0]
+    identity = method_id == METHOD_IDS["identity"]
+    if not (identity or method_id == RAW_METHOD_ID):
+        return deserialize_chunk(buf, backend, spec_name, dtype)
+    be = _resolve_backend(backend)
+    cur = _Cursor(body)
+    cur.u8()  # method id (peeked above)
+    cur.u8()  # reserved
+    n = cur.u64()
+    n_active = cur.u64()
+    ndim = cur.u8()
+    shape = tuple(cur.u64() for _ in range(ndim))
+    if int(np.prod(shape, dtype=np.int64)) != n:
+        raise ContainerFormatError(f"chunk shape {shape} does not hold n={n}")
+    if identity:
+        # same spec requirements as deserialize_chunk: a transform record
+        # (identity included) inside a spec-less container is corruption
+        # and must fail identically on the serial and parallel paths
+        if spec_name is None:
+            raise ContainerFormatError("transform chunk needs the container spec")
+        if spec_name not in _SPEC_DTYPES:
+            raise ContainerFormatError(f"unknown float spec {spec_name!r}")
+        if cur.u8() != 0:
+            raise ContainerFormatError("identity chunk carries params")
+        _META_CODECS["identity"][1](cur, n_active)
+        if n_active != 0 or cur.bytes32() or cur.bytes32() or cur.bytes32():
+            # a malformed identity record claiming active samples must take
+            # the full decode path's validation, never the fast path
+            return deserialize_chunk(buf, backend, spec_name, dtype)
+    else:
+        if cur.u8() != 0 or cur.bytes32() or cur.bytes32() or cur.bytes32():
+            raise ContainerFormatError("raw chunk carries transform fields")
+        if dtype is None:
+            raise ContainerFormatError("raw chunk needs the container dtype")
+    if out.size != n:
+        raise ContainerFormatError(
+            f"chunk record holds {n} elements, index claims {out.size}"
+        )
+    payload_z = cur.bytes64()
+    if cur.pos != len(body):
+        raise ContainerFormatError(
+            f"{len(body) - cur.pos} trailing bytes after chunk record"
+        )
+    _decompress_into_exact(be, payload_z, out.view(np.uint8).data)
+    return None
+
+
 def deserialize_chunk(
     buf: bytes,
     backend: str | Backend = "zlib",

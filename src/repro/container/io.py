@@ -174,8 +174,11 @@ class ContainerWriter:
                 # sampling the selection engine itself uses)
                 sample = pipeline._strided(flat, self._probe_elems)
                 try:
+                    # the writer's backend is the compressor every chunk
+                    # payload will feed — selection sizes candidates with it
                     self._picked = pipeline.select_method(
-                        sample, candidates=self._candidates, spec=self._spec
+                        sample, candidates=self._candidates, spec=self._spec,
+                        backend=self._backend.name,
                     )
                 except T.TransformError:
                     self._picked = ("auto", None)
@@ -184,7 +187,7 @@ class ContainerWriter:
             if name == "auto":
                 return pipeline.encode(
                     flat, method="auto", candidates=self._candidates,
-                    spec=self._spec,
+                    spec=self._spec, backend=self._backend.name,
                 )
             return pipeline.apply_transform(flat, name, prm, spec=self._spec)
         except Exception:
@@ -454,7 +457,18 @@ class ContainerReader:
         out = np.empty(offs[-1], self.dtype)
 
         def decode_into(i: int) -> None:
-            flat = self.read_chunk(i).reshape(-1)
+            # RAW/identity records (payload == output bytes) decompress
+            # straight into the preallocated output through the backend's
+            # decompress_into slot — no per-chunk plaintext assembly under
+            # the GIL; transform records take the regular decode + copy.
+            obj = F.deserialize_chunk_into(
+                self._record(i), self._be, out[offs[i] : offs[i + 1]],
+                spec_name=self.spec_name or None, dtype=self.dtype,
+            )
+            if obj is None:
+                return
+            flat = (pipeline.decode(obj)
+                    if isinstance(obj, pipeline.Encoded) else obj).reshape(-1)
             if flat.size != sizes[i]:
                 raise F.ContainerFormatError(
                     f"chunk {i}: record holds {flat.size} elements, index "

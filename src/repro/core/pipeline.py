@@ -87,6 +87,11 @@ DEFAULT_SAMPLE_ELEMS = 4096
 # paper's four techniques — selection literally becomes Fig. 6's "best of
 # the four", with the analytic proxy only choosing each family's parameter.
 DEFAULT_TOP_K = 4
+# measured residual error band of the analytic size proxy (docs/perf.md):
+# when a family's top candidates rank within this relative margin, the
+# per-sample metadata model is not trustworthy enough to pick between them
+# — the engine probes the real (compressed) metadata streams instead.
+PROXY_TIE_BAND = 0.05
 # phase-2 verification chunk granularity (memory bound, not a perf knob)
 DEFAULT_CHUNK_ELEMS = 1 << 20
 # phase-1 scoring engine: "stacked" = the whole candidate grid in ONE jit
@@ -293,16 +298,23 @@ def select_method(
     sample_elems: int = DEFAULT_SAMPLE_ELEMS,
     top_k: int = DEFAULT_TOP_K,
     engine: str | None = None,
+    backend: str | None = None,
 ) -> tuple[str, dict]:
     """Phase-1 primitive: rank candidates on ``x`` (typically a strided
     sample) and return the winning ``(method, params)`` without applying it
     to anything.  Streaming writers call this once, then stream every chunk
-    through :func:`apply_transform`."""
+    through :func:`apply_transform`.
+
+    ``backend`` names the byte-stream compressor the caller will feed
+    (container writers pass theirs): ``"rans"`` switches the analytic
+    ranking to the rANS size model (pooled byte entropy + frequency-table
+    overhead, zero extra dispatches — it falls out of the same scoregrid
+    histogram) and re-scores finalists with the real rANS coder."""
     prep = _prepare(x, spec)
     if prep.n_active == 0:
         return "identity", {}
     ranked, _first = _rank_candidates(prep, candidates, size_fn,
-                                      sample_elems, top_k, engine)
+                                      sample_elems, top_k, engine, backend)
     if not ranked:
         raise T.TransformError("no feasible transform candidate")
     name, p = ranked[0]
@@ -310,19 +322,26 @@ def select_method(
 
 
 def _rank_candidates(prep: _Prepared, candidates, size_fn, sample_elems,
-                     top_k, engine: str | None = None):
+                     top_k, engine: str | None = None,
+                     backend_hint: str | None = None):
     """Shared selection core -> (ranked candidate list, first_applied).
 
-    ``size_fn is None`` selects the fused analytic engine (zlib finalists);
-    a custom ``size_fn`` keeps the seed's exact compressor-matched
-    semantics (every candidate scored on the full array, pre-verified)."""
+    ``size_fn is None`` selects the fused analytic engine (zlib finalists,
+    or the real rANS coder when ``backend_hint == "rans"``); a custom
+    ``size_fn`` keeps the seed's exact compressor-matched semantics (every
+    candidate scored on the full array, pre-verified)."""
     engine = engine or default_engine()
     if engine not in _ENGINES:
         raise ValueError(f"unknown scoring engine {engine!r}; use {_ENGINES}")
     analytic = size_fn is None
     has_identity = any(n_ == "identity" for n_, _ in candidates)
     if analytic:
-        size_fn = lambda b: len(zlib.compress(b, 6))
+        if backend_hint == "rans":
+            from ..kernels.rans import ops as _rans_ops
+
+            size_fn = lambda b: len(_rans_ops.compress(b))
+        else:
+            size_fn = lambda b: len(zlib.compress(b, 6))
         from ..compression.bitplane import compress_int_stream
 
         # selection-time estimate of the shared normalization metadata:
@@ -341,6 +360,7 @@ def _rank_candidates(prep: _Prepared, candidates, size_fn, sample_elems,
         ranked = _select_analytic(
             prep.xf, prep.finite, prep.X, prep.spec, candidates, size_fn,
             common_est, sample_elems, top_k, has_identity, engine=engine,
+            backend_hint=backend_hint,
         )
         return ranked, None
     exponents_z, signs_z, passthrough_z = prep.pack_common()
@@ -380,6 +400,7 @@ def encode(
     top_k: int = DEFAULT_TOP_K,
     chunk_elems: int = DEFAULT_CHUNK_ELEMS,
     engine: str | None = None,
+    backend: str | None = None,
 ) -> Encoded:
     """presample: if set and method=='auto', candidate selection runs on a
     strided sample of `presample` elements first (legacy §Perf C knob — the
@@ -394,7 +415,7 @@ def encode(
                 xf[:: step][:presample], method="auto",
                 candidates=candidates, size_fn=size_fn, spec=spec,
                 sample_elems=sample_elems, top_k=top_k,
-                chunk_elems=chunk_elems, engine=engine,
+                chunk_elems=chunk_elems, engine=engine, backend=backend,
             )
             try:
                 return encode(
@@ -406,7 +427,7 @@ def encode(
     return _encode_full(
         x, method, params, candidates, size_fn, spec,
         sample_elems=sample_elems, top_k=top_k, chunk_elems=chunk_elems,
-        engine=engine,
+        engine=engine, backend=backend,
     )
 
 
@@ -421,6 +442,7 @@ def _encode_full(
     top_k: int = DEFAULT_TOP_K,
     chunk_elems: int = DEFAULT_CHUNK_ELEMS,
     engine: str | None = None,
+    backend: str | None = None,
 ) -> Encoded:
     if method != "auto":
         # explicit method: phase 2 only (identity and all-passthrough
@@ -438,7 +460,7 @@ def _encode_full(
     # size_fn keeps the seed's exact compressor-matched selection.
     has_identity = any(n_ == "identity" for n_, _ in candidates)
     ranked, first_applied = _rank_candidates(
-        prep, candidates, size_fn, sample_elems, top_k, engine
+        prep, candidates, size_fn, sample_elems, top_k, engine, backend
     )
 
     # phase 2: apply + verify finalists in rank order
@@ -504,9 +526,24 @@ def _generic_score(name, p, Xs, spec, extrema, scale):
     )
 
 
+def _probe_meta_bytes(s: "S.CandidateScore", Xs, spec, extrema,
+                      scale: float) -> float:
+    """Real (compressed) candidate metadata cost, replacing the analytic
+    per-sample model for proxy tie-breaks.  The stacked engine reads the
+    metadata streams retained from the grid fetch (zero dispatches); the
+    per-family oracle re-runs the forward on the sample (counted)."""
+    if s.meta_streams is not None:
+        return S.meta_bytes_from_streams(s.name, s.meta_streams, scale)
+    S.PHASE1.probe_dispatches += 1
+    fwd, _ = T.TRANSFORMS[s.name]
+    _Xt, _off, meta = fwd(Xs, spec=spec, extrema=extrema, **s.params)
+    return _scaled_meta_bytes(meta, scale)
+
+
 def _select_analytic(
     xf, finite, X, spec, candidates, size_fn, common_meta,
     sample_elems, top_k, has_identity=True, engine: str = "stacked",
+    backend_hint: str | None = None,
 ):
     """Analytic sample-select: rank candidates by the fused plane-stats size
     estimate; re-score the top finalists (+ identity) with the real
@@ -558,13 +595,56 @@ def _select_analytic(
     for s in scores:
         s.est_bytes *= scale
         s.meta_bytes += s.per_sample_bytes * scale
+        s.byte_bytes *= scale
 
-    ranked = sorted(scores, key=lambda s: s.total)
+    # proxy tie-break (ROADMAP PR 1 open item): within shift&save-evenness
+    # the analytic per-sample metadata model can misrank D on smooth streams
+    # (metadata compressibility is data-dependent: the model prices chunk
+    # ids at a fixed bit width, real zlib can be 3x off either way).  The
+    # model is untrusted — and replaced by a real sampled-zlib probe of the
+    # metadata streams — when the family's top two rank inside the proxy's
+    # ~5% error band OR the modelled metadata is itself a material share of
+    # the total (then the model's own error exceeds the band).  Free on the
+    # stacked engine: the streams rode the single grid fetch.
+    sse = sorted((s for s in scores if s.name == "shift_save_even"),
+                 key=lambda s: s.total)
+    if len(sse) >= 2 and (
+        sse[1].total <= sse[0].total * (1 + PROXY_TIE_BAND)
+        or max(sse[0].meta_bytes, sse[1].meta_bytes)
+        > PROXY_TIE_BAND * sse[0].total
+    ):
+        for s in sse:
+            s.meta_bytes = _probe_meta_bytes(s, Xs, spec, extrema, scale)
+
+    if backend_hint == "rans":
+        # rANS size model from the SAME grid fetch: pooled byte entropy is
+        # what an order-0 rANS coder reaches, plus frame overhead from the
+        # distinct-symbol count (no plane-run term: rANS has no LZ layer)
+        from ..kernels.rans import ops as _rans_ops, ref as _rans_ref
+
+        r_lanes = _rans_ref.clamp_lanes(
+            _rans_ops.default_lanes(), n_active * (spec.width // 8)
+        )
+
+        def _rank_key(s):
+            data = s.byte_bytes if s.table_syms else s.est_bytes
+            return data + _rans_ref.frame_overhead_bytes(
+                s.table_syms, r_lanes
+            ) + s.meta_bytes
+    else:
+        def _rank_key(s):
+            return s.total
+
+    ranked = sorted(scores, key=_rank_key)
     # family-diverse finalists: the proxy's residual error is correlated
     # within a transform family (same structural model), so the top-k slots
     # go to the best candidate of k DIFFERENT families first, then refill
     # by rank.  The exact re-scoring below absorbs family-level proxy bias.
-    finalists: list[tuple[str, dict]] = []
+    def _ckey(s):
+        return (s.name, tuple(sorted(s.params.items())))
+
+    finalists: list[S.CandidateScore] = []
+    taken: set = set()
     seen_families: set[str] = set()
     for s in ranked:
         if len(finalists) >= max(top_k, 1):
@@ -572,12 +652,14 @@ def _select_analytic(
         if s.name in seen_families:
             continue
         seen_families.add(s.name)
-        finalists.append((s.name, s.params))
+        finalists.append(s)
+        taken.add(_ckey(s))
     for s in ranked:
         if len(finalists) >= max(top_k, 1):
             break
-        if (s.name, s.params) not in finalists:
-            finalists.append((s.name, s.params))
+        if _ckey(s) not in taken:
+            finalists.append(s)
+            taken.add(_ckey(s))
 
     # exact scoring of finalists + identity baseline, on the sampled stream
     exact: list[tuple[float, str, dict]] = []
@@ -598,16 +680,28 @@ def _select_analytic(
         )
     else:
         pass_cost = 0.0
-    for name, p in finalists:
-        fwd, _ = T.TRANSFORMS[name]
-        try:
-            Xt, off, meta = fwd(Xs, spec=spec, extrema=extrema, **p)
-        except T.TransformError:
-            continue
-        vals = from_significand_int(Xt, off.astype(jnp.int32), spec)
+    for s in finalists:
+        name, p = s.name, s.params
+        if s.words is not None:
+            # stacked engine: the grid already transformed this candidate —
+            # feed the retained word stream and metadata arrays to the real
+            # compressor instead of re-running the forward (ROADMAP PR 4
+            # open item; pinned at 0 finalist dispatches by the CI gate)
+            data_bytes = S.payload_bytes_from_words(s.words, spec)
+            meta_cost = S.meta_bytes_from_streams(name, s.meta_streams, scale)
+        else:
+            S.PHASE1.finalist_dispatches += 1
+            fwd, _ = T.TRANSFORMS[name]
+            try:
+                Xt, off, meta = fwd(Xs, spec=spec, extrema=extrema, **p)
+            except T.TransformError:
+                continue
+            vals = from_significand_int(Xt, off.astype(jnp.int32), spec)
+            data_bytes = np.asarray(vals).tobytes()
+            meta_cost = _scaled_meta_bytes(meta, scale)
         exact.append(
-            (size_fn(np.asarray(vals).tobytes()) * scale + pass_cost
-             + _scaled_meta_bytes(meta, scale) + common_meta, name, p)
+            (size_fn(data_bytes) * scale + pass_cost + meta_cost
+             + common_meta, name, p)
         )
     exact.sort(key=lambda t: t[0])
     head = [(name, p) for _, name, p in exact]

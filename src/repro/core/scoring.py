@@ -48,7 +48,11 @@ import numpy as np
 from jax import lax
 
 from ..kernels import INTERPRET_DEFAULT
-from ..kernels.scoregrid.ops import estimate_bits_grid, finalize_bits_grid
+from ..kernels.scoregrid.ops import (
+    byte_entropy_bits,
+    finalize_bits_grid,
+    plane_byte_stats_grid,
+)
 from ..kernels.sharedbits.ops import plane_stats_u64
 from .float_bits import FloatSpec, to_bits
 
@@ -66,10 +70,20 @@ class Phase1Stats:
 
     dispatches: int = 0     # jitted scorer invocations (grid or per-family)
     device_gets: int = 0    # host fetches of scoring results
+    # finalist exact re-scoring forward runs: 0 on the stacked engine (it
+    # reuses the grid's already-transformed word streams); ~top_k on the
+    # per-family oracle.  Pinned exactly by the CI bench gate.
+    finalist_dispatches: int = 0
+    # sampled-zlib metadata probe forward runs (proxy tie-break): 0 on the
+    # stacked engine (meta streams ride the grid fetch), one per probed
+    # candidate on the per-family oracle.
+    probe_dispatches: int = 0
 
     def reset(self) -> None:
         self.dispatches = 0
         self.device_gets = 0
+        self.finalist_dispatches = 0
+        self.probe_dispatches = 0
 
 
 PHASE1 = Phase1Stats()
@@ -85,6 +99,16 @@ class CandidateScore:
     meta_bytes: float = 0.0   # fixed candidate metadata estimate (bytes)
     per_sample_bytes: float = 0.0  # per-sample metadata (scaled by the engine)
     valid: bool = True        # device-side feasibility verdict
+    # rANS size model (zero extra dispatches: both derive from the byte
+    # histogram the scoregrid pass already accumulates): pooled-entropy data
+    # bytes + the number of distinct byte values (frequency-table size)
+    byte_bytes: float = 0.0
+    table_syms: int = 0
+    # stacked engine only: the candidate's already-transformed sample word
+    # stream and per-sample metadata arrays, retained from the grid fetch so
+    # finalist re-scoring and the metadata probe never re-run a forward
+    words: object = None
+    meta_streams: object = None
     # device handles kept so the engine can fetch all scores in ONE round-trip
     _dev: object = None
 
@@ -152,8 +176,8 @@ def fetch_scores(scores: list[CandidateScore]) -> None:
 
     A pending handle is either a scalar (data-bits estimate only, metadata
     already costed on host) or a ``[data_bits, fixed_meta_bits,
-    per_sample_meta_bits, valid]`` lane vector from the fused family
-    scorers below."""
+    per_sample_meta_bits, valid, byte_bits, table_syms]`` lane vector from
+    the fused family scorers below."""
     pending = [s for s in scores if s._dev is not None]
     if not pending:
         return
@@ -166,6 +190,9 @@ def fetch_scores(scores: list[CandidateScore]) -> None:
             s.meta_bytes = float(v[1]) / 8.0
             s.per_sample_bytes = float(v[2]) / 8.0
             s.valid = bool(v[3] > 0.5)
+        if v.size >= 6:
+            s.byte_bytes = float(v[4]) / 8.0
+            s.table_syms = int(v[5])
         s._dev = None
 
 
@@ -193,17 +220,19 @@ def _candidate_words(Xt, off, spec: FloatSpec):
 
 def _sse_build(X, x_min, w_eff, top, spec: FloatSpec):
     """shift&save-evenness: the transform's own `_sse_core` + metadata model
-    (zigzag-delta chunk-id width + 1 evenness bit per sample)."""
+    (zigzag-delta chunk-id width + 1 evenness bit per sample).  The chunk-id
+    and evenness streams ride along as the candidate's ``extras`` so the
+    stacked engine can probe/score real metadata without a second forward."""
     from . import transforms as T
 
-    Y, j, _parity, j_max = T._sse_core(X, x_min, w_eff, top)
+    Y, j, parity, j_max = T._sse_core(X, x_min, w_eff, top)
     off = jnp.ones(X.shape, jnp.int32)
     n = X.shape[0]
     zz_max = 2 * jnp.max(jnp.abs(jnp.diff(j)), initial=jnp.int64(0))
     w_dense = jnp.maximum(_bit_length(j_max), 1.0)
     w = jnp.minimum(jnp.maximum(_bit_length(zz_max), 1.0), w_dense)
     return (_candidate_words(Y, off, spec), 128.0 + 64.0, n * (w + 1.0),
-            jnp.bool_(True))
+            jnp.bool_(True), (j, parity))
 
 
 def _ms_build(X, a1, a_const, thresh, max_iter: int, spec: FloatSpec):
@@ -212,7 +241,8 @@ def _ms_build(X, a1, a_const, thresh, max_iter: int, spec: FloatSpec):
     from . import transforms as T
 
     Xf, off, active = T._ms_loop(X, a1, a_const, thresh, max_iter)
-    return _candidate_words(Xf, off, spec), 128.0 + 64.0, 0.0, ~jnp.any(active)
+    return (_candidate_words(Xf, off, spec), 128.0 + 64.0, 0.0,
+            ~jnp.any(active), ())
 
 
 def _ss_loop_masked(Xc, Ae, Ao, enabled, thresh_cap):
@@ -248,7 +278,7 @@ def _ss_build(X, a_align, Ae, Ao, enabled, thresh_cap, spec: FloatSpec):
         X + a_align, Ae, Ao, enabled, thresh_cap
     )
     return (_candidate_words(Xf, off, spec), 128.0 + 128.0, 0.0,
-            ~any_active)
+            ~any_active, ())
 
 
 def _cb_build(X, k: int, spec: FloatSpec):
@@ -257,24 +287,32 @@ def _cb_build(X, k: int, spec: FloatSpec):
     The bins-don't-fit check becomes the `valid` lane.  Metadata modelled
     as raw (unpacked) shift + threshold words — an upper bound that only
     matters vs. the k-free families when the data estimates are nearly
-    tied."""
+    tied.  The shift/packed-floor arrays ride along as ``extras`` (they are
+    the transform's exact metadata streams)."""
     from . import transforms as T
 
-    Xt, _shifts, _new_lo, fits = T._cb_core(X, k=k, l=spec.man_bits)
+    Xt, shifts, new_lo, fits = T._cb_core(X, k=k, l=spec.man_bits)
     off = jnp.zeros(X.shape, jnp.int32)
     return (_candidate_words(Xt, off, spec), 128.0 + 64.0 * (2 * k - 1), 0.0,
-            fits)
+            fits, (shifts, new_lo))
 
 
 def _stack_lanes(words, meta_fixed_bits, meta_persample_bits, valid, spec):
-    """[data_bits, fixed_meta_bits, per_sample_meta_bits, valid] — the
-    per-sample lane is scaled by n_full/n_sample on the host, the fixed
-    lane is not."""
+    """[data_bits, fixed_meta_bits, per_sample_meta_bits, valid, byte_bits,
+    table_syms] — the per-sample lane is scaled by n_full/n_sample on the
+    host, the fixed lane is not.  ``byte_bits`` (pooled byte entropy) and
+    ``table_syms`` (distinct byte values) are the rANS size model, free
+    by-products of the histogram the zlib proxy already accumulates."""
+    lanes = spec.width // 8
+    ones, transitions, _ = plane_stats_u64(words)
+    hist = _pooled_byte_hist(words, lanes)
     return jnp.stack([
-        _estimate_words(words, lanes=spec.width // 8),
+        finalize_bits_grid(ones, transitions, hist, words.shape[0], lanes),
         jnp.asarray(meta_fixed_bits, jnp.float64),
         jnp.asarray(meta_persample_bits, jnp.float64),
         valid.astype(jnp.float64),
+        byte_entropy_bits(hist, words.shape[0], lanes),
+        (hist > 0).sum().astype(jnp.float64),
     ])
 
 
@@ -286,25 +324,26 @@ def _stack_lanes(words, meta_fixed_bits, meta_persample_bits, valid, spec):
 
 @functools.partial(jax.jit, static_argnames=("spec",))
 def _sse_score(X, x_min, w_eff, top, spec: FloatSpec):
-    return _stack_lanes(*_sse_build(X, x_min, w_eff, top, spec), spec)
+    return _stack_lanes(*_sse_build(X, x_min, w_eff, top, spec)[:4], spec)
 
 
 @functools.partial(jax.jit, static_argnames=("max_iter", "spec"))
 def _ms_score(X, a1, a_const, thresh, max_iter: int, spec: FloatSpec):
-    return _stack_lanes(*_ms_build(X, a1, a_const, thresh, max_iter, spec),
-                        spec)
+    return _stack_lanes(
+        *_ms_build(X, a1, a_const, thresh, max_iter, spec)[:4], spec
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("spec",))
 def _ss_score(X, a_align, Ae, Ao, enabled, thresh_cap, spec: FloatSpec):
     return _stack_lanes(
-        *_ss_build(X, a_align, Ae, Ao, enabled, thresh_cap, spec), spec
+        *_ss_build(X, a_align, Ae, Ao, enabled, thresh_cap, spec)[:4], spec
     )
 
 
 @functools.partial(jax.jit, static_argnames=("k", "spec"))
 def _cb_score(X, k: int, spec: FloatSpec):
-    return _stack_lanes(*_cb_build(X, k, spec), spec)
+    return _stack_lanes(*_cb_build(X, k, spec)[:4], spec)
 
 
 # ---------------------------------------------------------------------------
@@ -414,9 +453,13 @@ def _grid_score(Xs, x_min, dyn, spec: FloatSpec, plan: tuple):
     the transformed streams stack into a ``[n_candidates, n]`` uint64 word
     grid, and the fused bit-statistics estimator (``kernels/scoregrid``:
     per-plane run model + pooled byte-entropy accumulation) scores all rows
-    together.  Returns float64[n_candidates, 4] lanes
-    ``[data_bits, fixed_meta_bits, per_sample_meta_bits, valid]``."""
-    words, fixed, psamp, valid = [], [], [], []
+    together.  Returns ``(lanes, W, extras)``: float64[n_candidates, 6]
+    lanes ``[data_bits, fixed_meta_bits, per_sample_meta_bits, valid,
+    byte_bits, table_syms]``, the stacked word grid itself (retained so
+    finalist re-scoring reuses the already-transformed streams instead of
+    re-running forwards), and each candidate's per-sample metadata arrays
+    (sse chunk-ids/evenness, cb shifts/floors) for the metadata probe."""
+    words, fixed, psamp, valid, extras = [], [], [], [], []
     for entry, d in zip(plan, dyn):
         fam = entry[0]
         if fam == "sse":
@@ -429,18 +472,28 @@ def _grid_score(Xs, x_min, dyn, spec: FloatSpec, plan: tuple):
             built = _ss_build(Xs, a_align, Ae, Ao, enabled, cap, spec)
         else:
             built = _cb_build(Xs, entry[1], spec)
-        w, f, s_, v = built
+        w, f, s_, v, ex = built
         words.append(w)
         fixed.append(jnp.asarray(f, jnp.float64))
         psamp.append(jnp.asarray(s_, jnp.float64))
         valid.append(jnp.asarray(v).astype(jnp.float64))
-    est = estimate_bits_grid(
-        jnp.stack(words), lanes=spec.width // 8,
-        use_pallas=_USE_PALLAS_GRID, interpret=INTERPRET_DEFAULT,
+        extras.append(ex)
+    W = jnp.stack(words)
+    n = W.shape[1]
+    lanes = spec.width // 8
+    ones, trans, hist = plane_byte_stats_grid(
+        W, lanes=lanes, use_pallas=_USE_PALLAS_GRID,
+        interpret=INTERPRET_DEFAULT,
     )
-    return jnp.stack(
-        [est, jnp.stack(fixed), jnp.stack(psamp), jnp.stack(valid)], axis=1
-    )
+    mat = jnp.stack([
+        finalize_bits_grid(ones, trans, hist, n, lanes),
+        jnp.stack(fixed),
+        jnp.stack(psamp),
+        jnp.stack(valid),
+        byte_entropy_bits(hist, n, lanes),
+        (hist > 0).sum(axis=-1).astype(jnp.float64),
+    ], axis=1)
+    return mat, W, tuple(extras)
 
 
 def score_candidates_stacked(candidates, Xs, spec: FloatSpec, extrema,
@@ -487,30 +540,36 @@ def score_candidates_stacked(candidates, Xs, spec: FloatSpec, extrema,
     pending = [e[1] for e in entries if e[0] == "generic"]
     handles = [s._dev for s in pending]
     if plan:
-        out = _grid_score(Xs, int(extrema[0]), tuple(dyn),
-                          spec=spec, plan=tuple(plan))
+        out, W, extras = _grid_score(Xs, int(extrema[0]), tuple(dyn),
+                                     spec=spec, plan=tuple(plan))
         PHASE1.dispatches += 1
     else:
-        out = np.zeros((0, 4), np.float64)
+        out, W, extras = np.zeros((0, 6), np.float64), None, ()
     if plan or handles:
-        mat, vals = jax.device_get((out, handles))
+        # ONE device_get resolves the score lanes, the retained word grid +
+        # metadata extras (finalist reuse), and every generic handle
+        mat, W_np, extras_np, vals = jax.device_get((out, W, extras, handles))
         PHASE1.device_gets += 1
     else:
-        mat, vals = out, []
+        mat, W_np, extras_np, vals = out, None, (), []
     mat = np.asarray(mat, np.float64)
     scores: list[CandidateScore] = []
     ri = gi = 0
     for e in entries:
         if e[0] == "grid":
             row = mat[ri]
-            ri += 1
             scores.append(CandidateScore(
                 name=e[1], params=e[2],
                 est_bytes=float(row[0]) / 8.0,
                 meta_bytes=float(row[1]) / 8.0,
                 per_sample_bytes=float(row[2]) / 8.0,
                 valid=bool(row[3] > 0.5),
+                byte_bytes=float(row[4]) / 8.0,
+                table_syms=int(row[5]),
+                words=W_np[ri],
+                meta_streams=extras_np[ri],
             ))
+            ri += 1
         else:
             s = e[1]
             s.est_bytes = float(np.asarray(vals[gi], np.float64)) / 8.0
@@ -518,3 +577,51 @@ def score_candidates_stacked(candidates, Xs, spec: FloatSpec, extrema,
             gi += 1
             scores.append(s)
     return scores, deferred
+
+
+# ---------------------------------------------------------------------------
+# host-side reuse of retained grid streams (finalist re-scoring + the
+# metadata probe).  Everything here replicates the transforms' own metadata
+# packing bit-for-bit, so a score computed from retained streams equals the
+# score a fresh forward run would produce — the engines stay winner-identical.
+# ---------------------------------------------------------------------------
+
+_WIDTH_DTYPES = {8: "<u8", 4: "<u4", 2: "<u2"}
+
+
+def payload_bytes_from_words(words, spec: FloatSpec) -> bytes:
+    """A retained uint64 word row -> the exact bytes the real compressor
+    would see for that candidate's transformed stream (LE, spec width)."""
+    w = np.asarray(words, np.uint64)
+    return w.astype(_WIDTH_DTYPES[spec.width // 8]).tobytes()
+
+
+def meta_bytes_from_streams(name: str, streams, scale: float) -> float:
+    """Exact candidate metadata cost from retained grid streams — the same
+    quantity ``pipeline._scaled_meta_bytes(meta, scale)`` computes from a
+    forward run's meta object (sse/cb pack their streams with the identical
+    codecs the container format uses)."""
+    import zlib as _zlib
+
+    from ..compression.bitplane import compress_int_stream
+
+    if name == "multiply_shift":
+        return float(-(-(128 + 64) // 8))
+    if name == "shift_separate":
+        return float(-(-(128 + 2 * 64) // 8))
+    if name == "compact_bins":
+        shifts, new_lo = streams
+        nbits = 128 + 8 * (
+            len(compress_int_stream(np.asarray(shifts, np.int64)))
+            + len(compress_int_stream(np.asarray(new_lo, np.int64)[1:]))
+        )
+        return float(-(-nbits // 8))
+    if name == "shift_save_even":
+        ids, parity = streams
+        ids_z = compress_int_stream(np.asarray(ids, np.int64))
+        even_z = _zlib.compress(
+            np.packbits(np.asarray(parity, np.uint8)).tobytes(), 6
+        )
+        nbits = 128 + 64 + 8 * (len(ids_z) + len(even_z))
+        return -(-nbits // 8) * scale
+    raise KeyError(f"no metadata stream model for transform {name!r}")

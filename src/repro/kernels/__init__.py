@@ -11,9 +11,16 @@ jit'd wrapper (ops.py) and a pure-jnp oracle (ref.py):
   loop).
 * ``sharedbits`` — AND/OR reduction producing the shared-bit mask that
   drives GreedyGD base selection and the transforms' D_M choice.
+* ``scoregrid`` — fused per-plane bit statistics + pooled byte histogram
+  for the stacked phase-1 candidate grid.
+* ``rans`` — the device-resident entropy coder behind the ``"rans"``
+  container backend: Pallas encode-statistics pass + batched-jnp decode
+  lane loop over an N-way interleaved byte rANS bitstream (``ref.py`` is
+  the normative numpy spec).
 
 All kernels run in interpret mode on CPU (validated against ref.py in
-tests/test_kernels.py) and compile for TPU as the target.
+tests/test_kernels.py / tests/test_rans.py) and compile for TPU as the
+target.
 """
 import jax
 

@@ -1,0 +1,3 @@
+"""Interleaved-stream byte rANS entropy coder (the ``"rans"`` container
+backend): numpy bitstream reference (``ref``), Pallas/batched-jnp device
+stages (``kernel``), platform dispatch (``ops``)."""

@@ -1,0 +1,145 @@
+"""Device side of the rANS backend: Pallas encode-statistics pass + the
+batched-jnp decode lane loop.
+
+Encode's only data-parallel stage is the symbol-statistics (byte histogram)
+pass that feeds the quantized frequency table; it runs here as a Pallas
+kernel with the same ``(ROWS, 128)``-tile same-output-block accumulation as
+``kernels/scoregrid`` (interpret mode on CPU, TPU compile target), plus a
+fused-jnp twin producing identical integers.  The state-push loop itself is
+inherently sequential per lane and stays on host (``ref.py``).
+
+Decode is lane-parallel by construction (each lane owns an independent
+stream), so the decode lane loop is a ``lax.scan`` over symbol steps with
+every lane advanced vectorially per step — one device program for the whole
+payload, TPU-compilable, asserted byte-identical to ``ref.decode`` in
+``tests/test_rans.py``.  All state arithmetic fits int32 (states live in
+``[2^23, 2^31)``), keeping the scan TPU-native.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .ref import MAX_RENORM, PROB_BITS, PROB_SCALE, RANS_L
+
+ROWS = 8        # uint32 sublanes per histogram grid step (int32 min tile)
+_BLK = ROWS * 128
+
+
+# ---------------------------------------------------------------------------
+# encode symbol-statistics pass: 256-bin byte histogram
+# ---------------------------------------------------------------------------
+
+def _hist_kernel(x_ref, out_ref):
+    i = pl.program_id(0)
+    x = x_ref[...]                        # (ROWS, 128) uint32
+    vals = lax.broadcasted_iota(jnp.int32, (ROWS, 128, 256), 2)
+    hist = jnp.zeros((256,), jnp.int32)
+    for b in range(4):
+        by = ((x >> jnp.uint32(8 * b)) & jnp.uint32(0xFF)).astype(jnp.int32)
+        hist = hist + (by[:, :, None] == vals).sum((0, 1), dtype=jnp.int32)
+    blk = jnp.stack([hist[:128], hist[128:]])
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = blk
+
+    @pl.when(i > 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + blk
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _hist_blocks(x3: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    """uint32[r, 128] (r % ROWS == 0) -> int32[2, 128] histogram halves."""
+    return pl.pallas_call(
+        _hist_kernel,
+        grid=(x3.shape[0] // ROWS,),
+        in_specs=[pl.BlockSpec((ROWS, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((2, 128), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((2, 128), jnp.int32),
+        interpret=interpret,
+    )(x3)
+
+
+@jax.jit
+def _hist_jnp(data: jnp.ndarray) -> jnp.ndarray:
+    """Fused-jnp twin (identical integers): uint8[n] -> int32[256]."""
+    return jnp.bincount(data.astype(jnp.int32), length=256).astype(jnp.int32)
+
+
+def byte_hist(data, use_pallas: bool = False, interpret: bool = True):
+    """uint8[n] -> int32[256] byte histogram on device.
+
+    The Pallas path packs the byte stream into (ROWS, 128) uint32 tiles and
+    subtracts the statically known zero padding from bin 0."""
+    import numpy as np
+
+    data = jnp.asarray(np.ascontiguousarray(data).view(np.uint8))
+    n = int(data.shape[0])
+    if n == 0:
+        return jnp.zeros(256, jnp.int32)
+    if not use_pallas:
+        return _hist_jnp(data)
+    npad = -(-n // (4 * _BLK)) * (4 * _BLK)
+    padded = jnp.zeros(npad, jnp.uint8).at[:n].set(data)
+    words = lax.bitcast_convert_type(
+        padded.reshape(-1, 4), jnp.uint32
+    ).reshape(-1, 128)
+    out = _hist_blocks(words, interpret=interpret)
+    hist = jnp.concatenate([out[0], out[1]])
+    return hist.at[0].add(jnp.int32(n - npad))      # remove zero padding
+
+
+# ---------------------------------------------------------------------------
+# decode lane loop
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("steps", "lanes"))
+def decode_scan(states, bodies, body_lens, n, slot2sym, freq, cum,
+                steps: int, lanes: int):
+    """The rANS decode lane loop as one device scan.
+
+    All lanes advance in lockstep: per step each lane maps its state's low
+    12 bits through the slot table, pops the symbol, and renormalizes with
+    up to :data:`MAX_RENORM` byte reads from its own body stream.  Inactive
+    lane slots (the interleave remainder past ``n``) are masked no-ops.
+
+    Returns ``(syms int32[steps, lanes], x_final, ptr_final)``; the caller
+    verifies the termination invariants (pointer == body length, state back
+    at ``RANS_L``) on host via :func:`ref.check_final`."""
+    x0 = jnp.asarray(states, jnp.int32)
+    bod = jnp.asarray(bodies, jnp.int32)
+    blen = jnp.asarray(body_lens, jnp.int32)
+    n = jnp.asarray(n, jnp.int32)
+    slot2sym = jnp.asarray(slot2sym, jnp.int32)
+    freq = jnp.asarray(freq, jnp.int32)
+    cum = jnp.asarray(cum, jnp.int32)
+    maxw = bod.shape[1]
+    lane = jnp.arange(lanes, dtype=jnp.int32)
+
+    def step(carry, t):
+        x, ptr = carry
+        act = t * lanes + lane < n
+        slot = x & jnp.int32(PROB_SCALE - 1)
+        s = slot2sym[slot]
+        popped = freq[s] * (x >> PROB_BITS) + slot - cum[s]
+        x = jnp.where(act, popped, x)
+        for _ in range(MAX_RENORM):
+            m = act & (x < RANS_L) & (ptr < blen)
+            b = jnp.take_along_axis(
+                bod, jnp.minimum(ptr, maxw - 1)[:, None], axis=1
+            )[:, 0]
+            x = jnp.where(m, (x << 8) | b, x)
+            ptr = ptr + m.astype(jnp.int32)
+        return (x, ptr), jnp.where(act, s, 0)
+
+    (x, ptr), syms = lax.scan(
+        step, (x0, jnp.zeros(lanes, jnp.int32)),
+        jnp.arange(steps, dtype=jnp.int32),
+    )
+    return syms, x, ptr

@@ -1,0 +1,97 @@
+"""Platform dispatch for the rANS entropy-coder backend.
+
+On CPU the whole coder runs through the numpy reference (``ref.py``) — the
+container decode pool calls these functions from worker threads, where the
+lockstep-numpy loops beat dispatching interpret-mode device programs.  On
+TPU the data-parallel stages move on device: the encode symbol-statistics
+pass runs the Pallas histogram kernel and the decode lane loop runs the
+batched-jnp scan (``kernel.py``), both asserted byte-identical to the
+reference in ``tests/test_rans.py``.
+
+``REPRO_RANS_LANES`` overrides the encode-side interleave width (decode
+always honours the lane count stored in the frame).
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from .. import INTERPRET_DEFAULT
+from . import ref
+from .ref import RansError  # noqa: F401  (re-exported for callers)
+
+_ON_TPU = not INTERPRET_DEFAULT
+
+
+def default_lanes() -> int:
+    """Encode-side interleave width (``REPRO_RANS_LANES`` env override)."""
+    v = os.environ.get("REPRO_RANS_LANES", "").strip()
+    return int(v) if v else ref.DEFAULT_LANES
+
+
+def compress(data: bytes, lanes: int | None = None,
+             counts=None) -> bytes:
+    """bytes -> framed rANS stream.
+
+    ``counts`` feeds a precomputed byte histogram into the frequency pass
+    (e.g. phase-1's scoregrid histogram); otherwise the statistics pass
+    runs on device on TPU and as ``np.bincount`` on CPU."""
+    arr = np.frombuffer(data, np.uint8)
+    if counts is None and _ON_TPU and arr.size:
+        from .kernel import byte_hist
+
+        counts = np.asarray(byte_hist(arr, use_pallas=True,
+                                      interpret=INTERPRET_DEFAULT), np.int64)
+    return ref.encode(arr, lanes=lanes or default_lanes(), counts=counts)
+
+
+def decompress(buf: bytes) -> bytes:
+    """Framed rANS stream -> bytes (device lane loop on TPU, ref on CPU)."""
+    if _ON_TPU:
+        return decompress_device(buf)
+    return ref.decode(buf).tobytes()
+
+
+def decompress_device(buf: bytes, interpret: bool | None = None) -> bytes:
+    """Decode with the device lane loop: host framing parse, one
+    ``decode_scan`` program for the payload, host termination checks."""
+    from .kernel import decode_scan
+
+    lanes, n, freq, cum, states, bodies, body_lens = ref.parse_frame(bytes(buf))
+    if n == 0:
+        return b""
+    steps = -(-n // lanes)
+    syms, x, ptr = decode_scan(
+        states, bodies, body_lens, n,
+        np.repeat(np.arange(256, dtype=np.int32), freq), freq, cum,
+        steps=steps, lanes=lanes,
+    )
+    syms, x, ptr = map(np.asarray, (syms, x, ptr))
+    ref.check_final(x, ptr, body_lens)
+    return syms.astype(np.uint8).reshape(-1)[:n].tobytes()
+
+
+def decompress_capped(buf: bytes, max_out: int) -> bytes:
+    """Decode at most ``max_out + 1`` bytes: the frame header states the
+    payload length up front, so an oversized claim is refused before any
+    allocation (decompression-bomb guard, same contract as zlib/zstd)."""
+    if ref.peek_raw_len(bytes(buf)) > max(int(max_out), 0) + 1:
+        raise RansError("rans frame claims more bytes than the record expects")
+    return decompress(buf)
+
+
+def decompress_into(buf: bytes, out) -> int:
+    """Decode directly into a writable buffer; returns the true payload
+    length (a value != len(out) signals a mismatch without overrunning).
+
+    Same bomb guard as :func:`decompress_capped`: a frame whose header
+    claims a different length than the buffer expects is refused BEFORE the
+    lane loop runs or anything is allocated."""
+    mv = memoryview(out).cast("B")
+    claimed = ref.peek_raw_len(bytes(buf))
+    if claimed != len(mv):
+        return claimed          # mismatch: caller raises, nothing decoded
+    data = ref.decode(bytes(buf))
+    np.frombuffer(mv, np.uint8)[:] = data
+    return int(data.size)

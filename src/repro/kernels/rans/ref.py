@@ -1,0 +1,324 @@
+"""Pure-numpy reference for the interleaved-stream byte rANS coder.
+
+THE normative definition of the ``"rans"`` container backend's bitstream
+(byte-for-byte spec: ``docs/format.md`` §Backend: rans).  Everything here is
+integer numpy — no jax — so the committed golden fixtures regenerate
+identically on any platform and the container decode pool can call it from
+worker threads.  ``kernel.py`` holds the device twins (Pallas histogram
+pass, batched-jnp decode lane loop) that are asserted byte-identical to
+this module in ``tests/test_rans.py``.
+
+Coder shape (classic byte-oriented rANS, Duda 2014):
+
+* adaptive order-0 **byte** model: per-frame frequencies quantized to a
+  :data:`PROB_SCALE` = 4096-slot table (12-bit precision),
+* **N-way interleaved states** for lane parallelism: symbol ``i`` belongs
+  to lane ``i % lanes`` and each lane is an independent rANS stream with
+  its own body bytes, so decode is embarrassingly parallel across lanes
+  (the device decode scans all lanes in lockstep),
+* 32-bit states renormalized one byte at a time against
+  :data:`RANS_L` = 2^23; a state always lives in ``[RANS_L, 256*RANS_L)``,
+  so each encode push emits (and each decode step reads) at most
+  :data:`MAX_RENORM` = 2 bytes.
+
+Framing is explicit little-endian with the table and every per-lane stream
+length up front; decode consumes the frame *exactly* (trailing bytes,
+short lanes, a table that does not sum to 4096, or a lane that does not
+terminate back at ``RANS_L`` all raise :class:`RansError`).
+"""
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+PROB_BITS = 12
+PROB_SCALE = 1 << PROB_BITS     # 4096-slot quantized frequency table
+RANS_L = 1 << 23                # renormalization interval lower bound
+STATE_MAX = RANS_L << 8         # states always live in [RANS_L, STATE_MAX)
+MAX_RENORM = 2                  # byte renorm: <= 2 emissions/reads per symbol
+FRAME_VERSION = 1
+DEFAULT_LANES = 64              # encode default; decode honours the frame
+
+_HEADER = struct.Struct("<BBQ")         # version | lanes | raw_len
+_BITMAP_BYTES = 32                      # 256-bit symbol presence bitmap
+
+
+class RansError(ValueError):
+    """Malformed rANS frame (framing, table, or stream corruption)."""
+
+
+# ---------------------------------------------------------------------------
+# frequency table
+# ---------------------------------------------------------------------------
+
+def quantize_freqs(counts: np.ndarray) -> np.ndarray:
+    """Quantize raw byte counts to an int64[256] table summing exactly to
+    :data:`PROB_SCALE`, every occurring symbol >= 1.
+
+    Integer-only and deterministic (largest-remainder distribution, ties by
+    lower symbol; clamp overshoot stolen from the largest frequencies) so
+    every platform builds the same table from the same counts."""
+    counts = np.asarray(counts, np.int64)
+    if counts.shape != (256,):
+        raise RansError(f"byte counts must have shape (256,), got {counts.shape}")
+    n = int(counts.sum())
+    if n <= 0:
+        raise RansError("cannot build a frequency table for an empty stream")
+    nz = counts > 0
+    freq = np.zeros(256, np.int64)
+    freq[nz] = np.maximum(counts[nz] * PROB_SCALE // n, 1)
+    diff = PROB_SCALE - int(freq.sum())
+    if diff > 0:
+        # distribute the shortfall by largest truncation remainder
+        rem = counts * PROB_SCALE % n
+        order = np.lexsort((np.arange(256), -rem))
+        order = order[nz[order]]
+        k = order.size
+        freq[order] += diff // k
+        freq[order[: diff % k]] += 1
+    while diff < 0:
+        # min-1 clamps overshot the budget: steal from the largest
+        # frequencies (> 1), ties by lower symbol, until the sum is exact
+        order = np.lexsort((np.arange(256), -freq))
+        order = order[freq[order] > 1]
+        take = order[: min(-diff, order.size)]
+        freq[take] -= 1
+        diff += take.size
+    return freq
+
+
+def _cum_from_freq(freq: np.ndarray) -> np.ndarray:
+    cum = np.zeros(256, np.int64)
+    np.cumsum(freq[:-1], out=cum[1:])
+    return cum
+
+
+def _pack_table(freq: np.ndarray) -> bytes:
+    present = (freq > 0).astype(np.uint8)
+    bitmap = np.packbits(present, bitorder="little").tobytes()
+    return bitmap + freq[freq > 0].astype("<u2").tobytes()
+
+
+def _parse_table(buf: bytes, pos: int) -> tuple[np.ndarray, int]:
+    if pos + _BITMAP_BYTES > len(buf):
+        raise RansError("truncated rans frame: symbol bitmap")
+    present = np.unpackbits(
+        np.frombuffer(buf, np.uint8, _BITMAP_BYTES, pos), bitorder="little"
+    ).astype(bool)
+    pos += _BITMAP_BYTES
+    k = int(present.sum())
+    if k == 0:
+        raise RansError("rans frequency table has no symbols")
+    if pos + 2 * k > len(buf):
+        raise RansError("truncated rans frame: frequency table")
+    vals = np.frombuffer(buf, "<u2", k, pos).astype(np.int64)
+    pos += 2 * k
+    if int(vals.min()) < 1:
+        raise RansError("rans frequency table holds a zero for a present symbol")
+    if int(vals.sum()) != PROB_SCALE:
+        raise RansError(
+            f"rans frequency table sums to {int(vals.sum())}, want {PROB_SCALE}"
+        )
+    freq = np.zeros(256, np.int64)
+    freq[present] = vals
+    return freq, pos
+
+
+def table_bytes(n_symbols: int) -> int:
+    """Frame bytes spent on the frequency table for ``n_symbols`` distinct
+    byte values (the size model used by the selection engine)."""
+    return _BITMAP_BYTES + 2 * int(n_symbols)
+
+
+def frame_overhead_bytes(n_symbols: int, lanes: int) -> int:
+    """Total non-payload frame bytes: header + table + per-lane length
+    words + per-lane state flushes (the zero-dispatch rans size model fed
+    by the scoregrid byte histogram)."""
+    return _HEADER.size + table_bytes(n_symbols) + 8 * int(lanes)
+
+
+# ---------------------------------------------------------------------------
+# encode
+# ---------------------------------------------------------------------------
+
+def clamp_lanes(lanes: int, n: int) -> int:
+    """Encode-side lane count policy: never more lanes than symbols (spare
+    lanes would be pure flush overhead), never outside the u8 frame field."""
+    return max(1, min(int(lanes), 255, max(int(n), 1)))
+
+
+def encode(data, lanes: int | None = None, counts=None) -> bytes:
+    """uint8 stream -> framed rANS bytes.
+
+    ``counts`` optionally supplies the byte histogram (int[256]) so a
+    histogram already computed elsewhere — the device statistics pass, or
+    phase-1's scoregrid — feeds the frequency table with no second scan."""
+    if isinstance(data, (bytes, bytearray, memoryview)):
+        data = np.frombuffer(bytes(data), np.uint8)
+    data = np.ascontiguousarray(np.asarray(data, np.uint8))
+    n = int(data.size)
+    lanes = clamp_lanes(DEFAULT_LANES if lanes is None else lanes, n)
+    head = _HEADER.pack(FRAME_VERSION, lanes, n)
+    if n == 0:
+        return head
+
+    if counts is None:
+        counts = np.bincount(data, minlength=256)
+    freq = quantize_freqs(counts)
+    cum = _cum_from_freq(freq)
+
+    steps = -(-n // lanes)
+    pad = steps * lanes - n
+    sym = np.concatenate([data.astype(np.int64), np.zeros(pad, np.int64)])
+    sym = sym.reshape(steps, lanes)
+    tail_active = np.arange(lanes) < lanes - pad    # lanes live in the last step
+
+    fr = freq[sym]                                  # [steps, lanes] gathers
+    cm = cum[sym]
+    fr[steps - 1, ~tail_active] = 1                 # pad lanes: avoid 0-div
+
+    x = np.full(lanes, RANS_L, np.int64)
+    buf = np.zeros((lanes, MAX_RENORM * steps), np.uint8)   # emission order
+    ptr = np.zeros(lanes, np.int64)
+    lane_idx = np.arange(lanes)
+    renorm_shift = RANS_L >> PROB_BITS << 8         # x_max = this * freq
+    for t in range(steps - 1, -1, -1):              # symbols in reverse order
+        f = fr[t]
+        act = tail_active if t == steps - 1 else None
+        x_max = renorm_shift * f
+        for _ in range(MAX_RENORM):
+            m = x >= x_max
+            if act is not None:
+                m &= act
+            if not m.any():
+                break
+            buf[lane_idx[m], ptr[m]] = (x[m] & 0xFF).astype(np.uint8)
+            ptr[m] += 1
+            x[m] >>= 8
+        q, r = np.divmod(x, f)
+        pushed = (q << PROB_BITS) + r + cm[t]
+        x = np.where(tail_active, pushed, x) if act is not None else pushed
+
+    # lane stream = 4-byte LE state flush, then body bytes in decode order
+    # (the reverse of emission order)
+    streams = [
+        struct.pack("<I", int(x[j])) + buf[j, : ptr[j]][::-1].tobytes()
+        for j in range(lanes)
+    ]
+    lens = b"".join(struct.pack("<I", len(s)) for s in streams)
+    return b"".join([head, _pack_table(freq), lens, *streams])
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def peek_raw_len(buf: bytes) -> int:
+    """Decoded payload length claimed by the frame header (for the capped
+    decompress path: refuse before allocating anything)."""
+    if len(buf) < _HEADER.size:
+        raise RansError("truncated rans frame: header")
+    version, lanes, n = _HEADER.unpack_from(buf)
+    if version != FRAME_VERSION:
+        raise RansError(f"unsupported rans frame version {version}")
+    if lanes < 1:
+        raise RansError("rans frame declares zero lanes")
+    return n
+
+
+def parse_frame(buf: bytes):
+    """Frame bytes -> ``(lanes, n, freq, cum, states, bodies, body_lens)``.
+
+    ``bodies`` is a zero-padded uint8[lanes, max_body] matrix (always at
+    least one column so lockstep decoders can gather unconditionally);
+    validation here covers everything checkable without running the lane
+    loop: exact frame consumption, per-lane minimum length, state range."""
+    n = peek_raw_len(buf)
+    _, lanes, _ = _HEADER.unpack_from(buf)
+    pos = _HEADER.size
+    if n == 0:
+        if len(buf) != pos:
+            raise RansError("empty rans frame carries trailing bytes")
+        z = np.zeros(0, np.int64)
+        return 1, 0, z, z, np.zeros(1, np.int64), np.zeros((1, 1), np.uint8), \
+            np.zeros(1, np.int64)
+    freq, pos = _parse_table(buf, pos)
+    cum = _cum_from_freq(freq)
+    if pos + 4 * lanes > len(buf):
+        raise RansError("truncated rans frame: lane lengths")
+    lens = np.frombuffer(buf, "<u4", lanes, pos).astype(np.int64)
+    pos += 4 * lanes
+    if int(lens.min()) < 4:
+        raise RansError("rans lane stream shorter than its state flush")
+    if pos + int(lens.sum()) != len(buf):
+        raise RansError(
+            f"rans frame length mismatch: lanes claim {int(lens.sum())} "
+            f"stream bytes, frame holds {len(buf) - pos}"
+        )
+    starts = pos + np.concatenate([[0], np.cumsum(lens)[:-1]])
+    states = np.empty(lanes, np.int64)
+    body_lens = lens - 4
+    bodies = np.zeros((lanes, max(int(body_lens.max()), 1)), np.uint8)
+    for j in range(lanes):
+        s = int(starts[j])
+        states[j] = struct.unpack_from("<I", buf, s)[0]
+        bodies[j, : body_lens[j]] = np.frombuffer(
+            buf, np.uint8, int(body_lens[j]), s + 4
+        )
+    if int(states.min()) < RANS_L or int(states.max()) >= STATE_MAX:
+        raise RansError("rans state flush outside the renormalization interval")
+    # information bound: every symbol costs >= log2(SCALE/freq_max) bits and
+    # the stream holds at most 8 bits/byte (+8 per state), so a corrupted
+    # raw_len cannot send decoders into a phantom multi-gigabyte lane loop.
+    # (The degenerate single-symbol table prices symbols at 0 bits — there
+    # n is genuinely unbounded and integrity rests on the container CRC.)
+    fmax = int(freq.max())
+    if fmax < PROB_SCALE:
+        import math
+
+        cost = math.log2(PROB_SCALE / fmax)
+        info = 8.0 * (int(body_lens.sum()) + lanes)
+        if n > info / cost + lanes:
+            raise RansError(
+                "rans frame claims more symbols than its stream can encode"
+            )
+    return lanes, n, freq, cum, states, bodies, body_lens
+
+
+def check_final(x: np.ndarray, ptr: np.ndarray, body_lens: np.ndarray) -> None:
+    """Decode termination invariants: every body byte consumed and every
+    lane back at the encoder's initial state."""
+    if not (np.array_equal(np.asarray(ptr, np.int64), np.asarray(body_lens))
+            and bool(np.all(np.asarray(x, np.int64) == RANS_L))):
+        raise RansError(
+            "rans stream did not terminate at the initial state (corrupt body)"
+        )
+
+
+def decode(buf: bytes) -> np.ndarray:
+    """Framed rANS bytes -> uint8[n] payload (host lockstep-lane loop)."""
+    lanes, n, freq, cum, states, bodies, body_lens = parse_frame(bytes(buf))
+    if n == 0:
+        return np.zeros(0, np.uint8)
+    slot2sym = np.repeat(np.arange(256, dtype=np.int64), freq)    # [4096]
+    steps = -(-n // lanes)
+    x = states.copy()
+    ptr = np.zeros(lanes, np.int64)
+    out = np.zeros((steps, lanes), np.uint8)
+    lane_idx = np.arange(lanes)
+    mask_slot = np.int64(PROB_SCALE - 1)
+    for t in range(steps):
+        act = (t * lanes + lane_idx) < n
+        slot = x & mask_slot
+        s = slot2sym[slot]
+        out[t, act] = s[act]
+        x = np.where(act, freq[s] * (x >> PROB_BITS) + slot - cum[s], x)
+        for _ in range(MAX_RENORM):
+            m = act & (x < RANS_L) & (ptr < body_lens)
+            if not m.any():
+                break
+            x[m] = (x[m] << 8) | bodies[lane_idx[m], ptr[m]]
+            ptr[m] += 1
+    check_final(x, ptr, body_lens)
+    return out.reshape(-1)[:n]

@@ -105,6 +105,17 @@ def plane_byte_stats_grid(
     return _stats_grid_jnp(W, lanes)
 
 
+def byte_entropy_bits(hist, n: int, lanes: int) -> jnp.ndarray:
+    """Pooled order-0 byte entropy (bits) of a stream from its histogram —
+    the Huffman-literal bound of the zlib proxy AND, directly, the data
+    model of a 4096-slot order-0 rANS coder (which reaches the order-0
+    entropy to within quantization error).  Batched over leading dims."""
+    nbytes = jnp.float64(n * lanes)
+    p = hist.astype(jnp.float64) / nbytes
+    pe = jnp.where(p > 0, p, 1.0)
+    return nbytes * -(pe * jnp.log2(pe)).sum(axis=-1)
+
+
 def finalize_bits_grid(ones, trans, hist, n: int, lanes: int) -> jnp.ndarray:
     """Integer stats -> float64[nc] estimated stream bits (the same entropy
     formulas as the per-family ``scoring._estimate_words``, batched)."""
@@ -120,12 +131,7 @@ def finalize_bits_grid(ones, trans, hist, n: int, lanes: int) -> jnp.ndarray:
     constant = (ones == 0) | (ones == n)
     per_plane = jnp.where(constant, 0.0, per_plane)
     plane_bits = (nf * per_plane).sum(axis=-1)
-
-    nbytes = jnp.float64(n * lanes)
-    p = hist.astype(jnp.float64) / nbytes
-    pe = jnp.where(p > 0, p, 1.0)
-    byte_bits = nbytes * -(pe * jnp.log2(pe)).sum(axis=-1)
-    return jnp.maximum(plane_bits, byte_bits)
+    return jnp.maximum(plane_bits, byte_entropy_bits(hist, n, lanes))
 
 
 @functools.partial(

@@ -107,6 +107,10 @@ CASES = {
     # non-default backend leg: written/checked only where zstandard exists
     "shift_save_even_f64_zstd": (data_f64, "float64", "shift_save_even",
                                  {"D": 8}, 2, "zstd"),
+    # rANS entropy-coder backend (always available: numpy reference coder);
+    # pins the interleaved-stream bitstream of docs/format.md §Backend: rans
+    "shift_save_even_f64_rans": (data_f64, "float64", "shift_save_even",
+                                 {"D": 8}, 2, "rans"),
 }
 
 

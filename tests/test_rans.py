@@ -1,0 +1,339 @@
+"""rANS entropy-coder backend: bitstream edge cases, numpy-ref vs device
+parity (Pallas histogram pass + batched-jnp decode lane loop, asserted
+byte-identical), frame-level corruption/truncation behavior, registry
+integration, and the decompress_into slots of every registered backend."""
+import io
+
+import numpy as np
+import pytest
+
+from repro.container import (
+    ContainerError,
+    ContainerReader,
+    ContainerWriter,
+    available_backends,
+    get_backend,
+)
+from repro.kernels.rans import ops as rans_ops, ref
+from repro.kernels.rans.kernel import byte_hist
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+# every named edge case + representative bulk streams; 2**16 + 1 crosses the
+# interleave remainder for every default-ish lane count
+STREAMS = {
+    "empty": b"",
+    "single_byte": b"\x42",
+    "all_one_symbol": b"\x07" * 4099,
+    "two_symbols": bytes((_rng(1).integers(0, 2, 997, dtype=np.uint8) * 255)
+                         .astype(np.uint8)),
+    "uniform_random": bytes(_rng(2).integers(0, 256, 2 ** 16 + 1,
+                                             dtype=np.uint8)),
+    "skewed": bytes(np.minimum(_rng(3).geometric(0.2, 30000), 255)
+                    .astype(np.uint8)),
+    "float_words": np.linspace(0.0, 1.0, 4097).tobytes(),
+}
+LANE_COUNTS = (1, 2, 5, 8, 64, 255)
+
+
+# ---------------------------------------------------------------------------
+# bitstream round-trip + edge cases (ref = the normative spec)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(STREAMS))
+@pytest.mark.parametrize("lanes", LANE_COUNTS)
+def test_ref_roundtrip(name, lanes):
+    data = STREAMS[name]
+    frame = ref.encode(data, lanes=lanes)
+    assert ref.decode(frame).tobytes() == data
+
+
+def test_interleave_remainder_every_residue():
+    """2^16 + 1 symbols: for every lane count, the last step leaves a
+    different remainder of live lanes — all must round-trip."""
+    data = STREAMS["uniform_random"]
+    for lanes in (2, 3, 7, 16, 64):
+        assert (2 ** 16 + 1) % lanes != 0
+        frame = ref.encode(data, lanes=lanes)
+        assert ref.decode(frame).tobytes() == data
+
+
+def test_degenerate_single_symbol_table():
+    """All-one-symbol stream: freq[s] == 4096 makes every state push a
+    no-op, so lane bodies are empty — the frame is pure framing."""
+    data = b"\x07" * 100_000
+    frame = ref.encode(data, lanes=8)
+    lanes, n, freq, _cum, _st, _bodies, body_lens = ref.parse_frame(frame)
+    assert n == len(data)
+    assert int(freq[7]) == ref.PROB_SCALE
+    assert int(np.asarray(body_lens).sum()) == 0
+    assert len(frame) == ref.frame_overhead_bytes(1, 8)   # vs 100 KB payload
+    assert ref.decode(frame).tobytes() == data
+
+
+def test_empty_payload_is_header_only():
+    frame = ref.encode(b"")
+    assert len(frame) == 10
+    assert ref.decode(frame).tobytes() == b""
+    with pytest.raises(ref.RansError):
+        ref.decode(frame + b"\x00")              # trailing bytes are loud
+
+
+def test_quantize_freqs_exact_and_deterministic():
+    rng = _rng(4)
+    for _ in range(20):
+        counts = np.zeros(256, np.int64)
+        k = int(rng.integers(1, 257))
+        syms = rng.choice(256, k, replace=False)
+        counts[syms] = rng.integers(1, 10_000, k)
+        freq = ref.quantize_freqs(counts)
+        assert int(freq.sum()) == ref.PROB_SCALE
+        assert np.all(freq[counts > 0] >= 1)
+        assert np.all(freq[counts == 0] == 0)
+        assert np.array_equal(freq, ref.quantize_freqs(counts))
+
+
+# ---------------------------------------------------------------------------
+# kernel-path parity: device output byte-identical to ref on every stream
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(STREAMS))
+def test_pallas_hist_matches_bincount(name):
+    arr = np.frombuffer(STREAMS[name], np.uint8)
+    want = np.bincount(arr, minlength=256)
+    got_pallas = np.asarray(byte_hist(arr, use_pallas=True, interpret=True))
+    got_jnp = np.asarray(byte_hist(arr, use_pallas=False))
+    assert np.array_equal(got_pallas, want)
+    assert np.array_equal(got_jnp, want)
+
+
+@pytest.mark.parametrize("name", sorted(STREAMS))
+@pytest.mark.parametrize("lanes", (1, 5, 64))
+def test_device_decode_byte_identical_to_ref(name, lanes):
+    data = STREAMS[name]
+    frame = ref.encode(data, lanes=lanes)
+    assert rans_ops.decompress_device(frame) == ref.decode(frame).tobytes()
+    assert rans_ops.decompress(frame) == data
+
+
+@pytest.mark.parametrize("name", sorted(STREAMS))
+def test_hist_fed_encode_byte_identical(name):
+    """Feeding the device histogram into the frequency pass must produce
+    the identical frame (same counts -> same quantized table)."""
+    data = STREAMS[name]
+    if not data:
+        return
+    arr = np.frombuffer(data, np.uint8)
+    counts = np.asarray(byte_hist(arr, use_pallas=True, interpret=True),
+                        np.int64)
+    assert ref.encode(arr, counts=counts) == ref.encode(arr)
+
+
+def test_device_decode_rejects_corrupt_final_state():
+    data = STREAMS["skewed"]
+    frame = bytearray(ref.encode(data, lanes=8))
+    # flip a body byte far from the framing: both decoders must agree that
+    # the stream no longer terminates at the initial state
+    frame[-3] ^= 0xFF
+    with pytest.raises(ref.RansError):
+        ref.decode(bytes(frame))
+    with pytest.raises(ref.RansError):
+        rans_ops.decompress_device(bytes(frame))
+
+
+# ---------------------------------------------------------------------------
+# corruption fuzz at the frame level (truncation: every cut must be loud)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("lanes", (1, 5, 64))
+def test_truncation_never_silent(lanes):
+    data = STREAMS["skewed"]
+    frame = ref.encode(data, lanes=lanes)
+    for cut in range(len(frame)):
+        try:
+            got = ref.decode(frame[:cut]).tobytes()
+        except ref.RansError:
+            continue
+        assert got == data, f"silent wrong decode at cut {cut}"
+
+
+def test_header_and_table_flips_loud_or_harmless():
+    """Flips in the framing region (header/bitmap/freqs/lengths) must raise
+    or decode exact — the stream body is CRC-covered at the container layer
+    (tests/test_container_fuzz.py exercises that on the golden fixture)."""
+    data = STREAMS["two_symbols"]
+    frame = ref.encode(data, lanes=5)
+    framing = ref._HEADER.size + ref._BITMAP_BYTES + 2 * 2 + 4 * 5
+    for pos in range(min(framing, len(frame))):
+        for mask in (0x01, 0x80, 0xFF):
+            bad = bytearray(frame)
+            bad[pos] ^= mask
+            try:
+                got = ref.decode(bytes(bad)).tobytes()
+            except ref.RansError:
+                continue
+            assert got == data, f"silent wrong decode at framing byte {pos}"
+
+
+# ---------------------------------------------------------------------------
+# registry + container integration
+# ---------------------------------------------------------------------------
+
+def test_rans_registered():
+    assert "rans" in available_backends()
+    be = get_backend("rans")
+    assert be.decompress_capped is not None
+    assert be.decompress_into is not None
+
+
+def test_backend_error_surface_is_container_error():
+    be = get_backend("rans")
+    payload = be.compress(b"payload" * 100)
+    with pytest.raises(ContainerError):
+        be.decompress(payload[:9])
+    with pytest.raises(ContainerError):
+        be.decompress_capped(payload, 10)     # claims more than expected
+    assert be.decompress_capped(payload, 700) == b"payload" * 100
+
+
+def test_container_roundtrip_rans_all_read_paths(tmp_path):
+    rng = _rng(7)
+    x = 1.0 + rng.integers(0, 1 << 16, 20_000) / float(1 << 18)
+    path = tmp_path / "t.fpc"
+    with ContainerWriter(path, dtype=np.float64, backend="rans") as w:
+        for i in range(0, x.size, 4096):
+            w.append(x[i : i + 4096])
+    with ContainerReader(path) as r:
+        assert r.backend == "rans"
+        serial = r.read_all()
+        par = r.read_all(parallel=True)
+        it = np.concatenate([c.reshape(-1) for c in r.iter_chunks(prefetch=3)])
+    for got in (serial, par, it):
+        assert np.array_equal(got.view(np.uint64), x.view(np.uint64))
+
+
+@pytest.mark.parametrize("backend", available_backends())
+def test_decompress_into_exact_and_mismatch(backend):
+    """Every backend's decompress_into: exact fill for the true size, and a
+    returned length != len(out) for both over- and under-sized buffers."""
+    be = get_backend(backend)
+    if be.decompress_into is None:
+        pytest.skip(f"{backend} has no decompress_into")
+    payload = bytes(_rng(8).integers(0, 7, 9000, dtype=np.uint8))
+    comp = be.compress(payload)
+    out = bytearray(len(payload))
+    assert be.decompress_into(comp, out) == len(payload)
+    assert bytes(out) == payload
+    small = bytearray(len(payload) - 10)
+    try:
+        assert be.decompress_into(comp, small) != len(small)
+    except ContainerError:
+        pass                                   # refusing outright is fine too
+    big = bytearray(len(payload) + 10)
+    try:
+        assert be.decompress_into(comp, big) != len(big)
+    except ContainerError:
+        pass
+
+
+def test_decompress_into_refuses_oversized_claim_fast():
+    """Bomb guard on the into-path: a frame whose header claims far more
+    bytes than the caller's buffer must be refused up front — no lane loop,
+    no allocation (same contract as decompress_capped)."""
+    import time
+
+    data = b"\x07" * 1000                       # degenerate: tiny frame
+    frame = bytearray(rans_ops.compress(data))
+    frame[2:10] = (50_000_000).to_bytes(8, "little")   # claim 50 MB
+    out = bytearray(1000)
+    t0 = time.time()
+    got = rans_ops.decompress_into(bytes(frame), out)
+    assert got == 50_000_000 and got != len(out)
+    assert time.time() - t0 < 0.5               # refused, not decoded
+    be = get_backend("rans")
+    with pytest.raises(ContainerError):
+        be.decompress_capped(bytes(frame), 1000)
+
+
+def test_identity_record_in_specless_container_loud_on_both_paths():
+    """Parity of the parallel fast path with serial decode: an identity
+    transform record reaching a container without a float spec must raise
+    identically through deserialize_chunk and deserialize_chunk_into."""
+    from repro.container import format as F
+    from repro.core import pipeline
+
+    x = np.linspace(1.0, 2.0, 64)
+    enc = pipeline.apply_transform(x, "identity")
+    rec = F.serialize_chunk(enc, "zlib")
+    out = np.empty(64, np.float64)
+    with pytest.raises(ContainerError):
+        F.deserialize_chunk(rec, "zlib", spec_name=None)
+    with pytest.raises(ContainerError):
+        F.deserialize_chunk_into(rec, "zlib", out, spec_name=None)
+
+
+def test_parallel_read_identity_uses_into_path(tmp_path):
+    """Identity/raw records decode straight into the preallocated output on
+    the parallel path — byte-identical to serial for every backend."""
+    rng = _rng(9)
+    for backend in available_backends():
+        x = rng.standard_normal(30_000)
+        bio = io.BytesIO()
+        with ContainerWriter(bio, dtype=np.float64, backend=backend,
+                             method="identity") as w:
+            for i in range(0, x.size, 7000):
+                w.append(x[i : i + 7000])
+        with ContainerReader(bio.getvalue()) as r:
+            assert np.array_equal(
+                r.read_all(parallel=True).view(np.uint64),
+                x.view(np.uint64),
+            )
+
+
+# ---------------------------------------------------------------------------
+# selection integration: rANS size estimates at zero extra dispatches
+# ---------------------------------------------------------------------------
+
+def test_select_method_rans_hint_single_dispatch():
+    from repro.core import pipeline, scoring
+    from repro.data import gas_turbine_emissions
+
+    x = gas_turbine_emissions(30_000)
+    pipeline.select_method(x, backend="rans")      # warm the jit caches
+    scoring.PHASE1.reset()
+    name, params = pipeline.select_method(x, backend="rans")
+    assert name in ("identity", "compact_bins", "multiply_shift",
+                    "shift_separate", "shift_save_even")
+    assert scoring.PHASE1.dispatches == 1
+    assert scoring.PHASE1.device_gets == 1
+    assert scoring.PHASE1.finalist_dispatches == 0
+
+
+def test_rans_estimate_tracks_real_size():
+    """The zero-dispatch rANS estimate (pooled byte entropy + frame
+    overhead) must predict the real coder's output within a loose band —
+    it only has to *rank*, but an estimate 2x off would mis-rank even
+    across families."""
+    from repro.core import scoring as S
+    from repro.core.float_bits import F64, to_bits
+    import jax.numpy as jnp
+
+    rng = _rng(10)
+    for x in (
+        1.0 + rng.integers(0, 1 << 12, 8192) / float(1 << 16),
+        1.0 + rng.integers(0, 3, 8192) / 8.0,
+    ):
+        w = np.asarray(to_bits(jnp.asarray(x), F64), np.uint64)
+        payload = w.astype("<u8").tobytes()
+        hist = np.bincount(np.frombuffer(payload, np.uint8), minlength=256)
+        est_bits = float(np.asarray(S.byte_entropy_bits(
+            jnp.asarray(hist), w.shape[0], 8
+        )))
+        est = est_bits / 8.0 + ref.frame_overhead_bytes(
+            int((hist > 0).sum()), rans_ops.default_lanes()
+        )
+        real = len(rans_ops.compress(payload))
+        assert 0.7 * real <= est <= 1.3 * real, (est, real)
