@@ -23,6 +23,7 @@ readable — pre-1.0 format break, recorded in CHANGES.md.
 from __future__ import annotations
 
 import json
+import logging
 import os
 import shutil
 from pathlib import Path
@@ -33,6 +34,9 @@ import numpy as np
 from ..container import ContainerError, ContainerReader, ContainerWriter
 from ..container.format import dtype_name as _dtype_name, resolve_dtype
 from ..container.io import in_decode_pool, shared_decode_pool
+from ..reliability import durable as _durable
+
+log = logging.getLogger("repro.reliability")
 
 MANIFEST_FORMAT = 2
 CHUNK = 1 << 18
@@ -163,10 +167,27 @@ def save_tree(tree, directory: str | Path, extra: dict | None = None,
         "arrays": index,
         "extra": extra or {},
     }
-    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    # durable two-phase commit: every file in the staging dir is already
+    # durably written (ContainerWriter fsyncs; the manifest goes through
+    # durable.write_bytes), the staging dir itself is fsynced, and the
+    # rename onto the destination is fsynced in the parent — a crash at any
+    # boundary leaves the destination as the previous complete checkpoint
+    # or the new one, never a torn directory (tests/test_crash_matrix.py)
+    _durable.write_bytes(tmp / "manifest.json",
+                         json.dumps(manifest).encode("utf-8"))
+    _durable.fsync_dir(tmp)
+    old = None
     if directory.exists():
-        shutil.rmtree(directory)
-    os.replace(tmp, directory)  # atomic commit
+        # never a delete-then-rename window on the previous version: move
+        # it aside first (the `.tmp` suffix keeps it invisible to step
+        # discovery and lets _gc sweep it if we crash before the rmtree)
+        old = directory.with_name(directory.name + ".old.tmp")
+        if old.exists():
+            shutil.rmtree(old)
+        os.replace(directory, old)
+    _durable.replace_dir(tmp, directory)  # atomic commit (+ parent fsync)
+    if old is not None:
+        shutil.rmtree(old, ignore_errors=True)
     raw = sum(r["raw"] for r in index)
     comp = sum(r["comp"] for r in index)
     return {"raw_bytes": raw, "comp_bytes": comp,
@@ -252,10 +273,38 @@ class CheckpointManager:
         return steps[-1] if steps else None
 
     def restore_latest(self):
-        s = self.latest_step()
-        if s is None:
-            return None, None
-        return restore_tree(self.root / f"step_{s:08d}")
+        """Restore the newest intact checkpoint.
+
+        A corrupt newest step (damaged container, unreadable manifest,
+        missing arrays) is **quarantined** — renamed to
+        ``step_<n>.corrupt`` (kept for inspection/salvage, invisible to
+        step discovery) — and the restore falls back to the next-newest
+        step, with a warning, until one restores or none remain."""
+        while True:
+            s = self.latest_step()
+            if s is None:
+                return None, None
+            path = self.root / f"step_{s:08d}"
+            try:
+                return restore_tree(path)
+            except (OSError, ValueError) as e:
+                # ContainerError and json decode errors are ValueErrors;
+                # OSError covers vanished/unreadable files
+                q = self._quarantine(path)
+                log.warning(
+                    "checkpoint step %d is corrupt (%s: %s) — quarantined "
+                    "to %s, falling back to the previous step",
+                    s, type(e).__name__, e, q.name,
+                )
+
+    def _quarantine(self, path: Path) -> Path:
+        q = path.with_name(path.name + ".corrupt")
+        k = 1
+        while q.exists():
+            k += 1
+            q = path.with_name(f"{path.name}.corrupt.{k}")
+        os.replace(path, q)
+        return q
 
     def _gc(self):
         # sweep orphaned .tmp staging dirs (crashed saves); the save that

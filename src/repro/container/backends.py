@@ -51,13 +51,23 @@ def register_backend(name: str, compress, decompress,
                               decompress_into)
 
 
+# known optional backends -> the pip package that provides them, so a
+# reader hitting a container written with an absent backend gets an
+# actionable "install X" error instead of a bare registry miss
+_BACKEND_PACKAGES = {"zstd": "zstandard"}
+
+
 def get_backend(name: str) -> Backend:
     b = _REGISTRY.get(name)
     if b is None:
+        pkg = _BACKEND_PACKAGES.get(name)
+        hint = (
+            f"install the {pkg!r} package (pip install {pkg}) to decode it"
+            if pkg else "decoding this container requires the library it names"
+        )
         raise ContainerError(
             f"compressor backend {name!r} is not available "
-            f"(registered: {', '.join(sorted(_REGISTRY)) or 'none'}); "
-            "decoding this container requires the library it names"
+            f"(registered: {', '.join(sorted(_REGISTRY)) or 'none'}); {hint}"
         )
     return b
 

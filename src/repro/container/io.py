@@ -34,6 +34,7 @@ import numpy as np
 
 from ..core import pipeline, transforms as T
 from ..core.float_bits import BF16, F32, F64
+from ..reliability import durable as _durable, faults as _faults, watchdog as _watchdog
 from . import format as F
 from .backends import ContainerError, get_backend
 
@@ -112,6 +113,7 @@ class ContainerWriter:
         probe_elems: int = PROBE_ELEMS,
         probe_threshold: int = PROBE_THRESHOLD,
         fallback_identity: bool = True,
+        durable: bool = True,
     ):
         self._dtype_name = F.dtype_name(dtype)
         self._dtype = F.resolve_dtype(self._dtype_name)
@@ -132,11 +134,21 @@ class ContainerWriter:
         self._chunks: list[dict] = []
         self._closed = False
 
+        self._staged: _durable.DurableFile | None = None
         if hasattr(path_or_file, "write"):
             self._f = path_or_file
             self._owns = False
         else:
-            self._f = open(Path(path_or_file), "wb")
+            # path destinations are written durably: all bytes go to a
+            # same-directory staging file, fsynced and atomically renamed
+            # onto the destination at close() — a crash or failed write at
+            # ANY point leaves the previous file (or no file) intact, never
+            # a truncated/partial container (docs/reliability.md).
+            # ``durable=False`` keeps the staging+rename atomicity but
+            # skips the fsyncs (process-crash-safe, not power-loss-safe).
+            self._staged = _durable.DurableFile(Path(path_or_file),
+                                                fsync=durable)
+            self._f = self._staged.file
             self._owns = True
         self._pos = 0
         self._write(F.encode_header(self._spec_name, self._dtype_name,
@@ -202,6 +214,7 @@ class ContainerWriter:
         """Encode + serialize one chunk; returns {method, raw, comp}."""
         if self._closed:
             raise ContainerError("writer is closed")
+        _faults.maybe_crash("container.append")
         arr = np.asarray(chunk)
         if F.dtype_name(arr.dtype) != self._dtype_name:
             raise ContainerError(
@@ -241,21 +254,34 @@ class ContainerWriter:
             return
         index = F.encode_index(self._entries, self._user_meta)
         index_off = self._pos
-        self._write(index)
-        self._write(F.encode_footer(index_off, zlib.crc32(index),
-                                    len(self._entries)))
-        self._f.flush()
-        if self._owns:
+        try:
+            self._write(index)
+            self._write(F.encode_footer(index_off, zlib.crc32(index),
+                                        len(self._entries)))
+            self._f.flush()
+        except BaseException:
+            # a failed finalize must not leave a half-written destination:
+            # path writers discard the stage (previous file intact)
+            if self._staged is not None:
+                self._staged.discard()
+            self._closed = True
+            raise
+        if self._staged is not None:
+            self._staged.commit()  # fsync -> atomic rename -> dir fsync
+        elif self._owns:
             self._f.close()
         self._closed = True
 
     def abort(self) -> None:
-        """Stop WITHOUT finalizing: no index/footer is written, so readers
-        reject the partial file loudly instead of parsing a half-written
-        container as complete."""
+        """Stop WITHOUT finalizing: path destinations keep their previous
+        content (the staging file is discarded); file-object destinations
+        are left with no index/footer, so readers reject the partial bytes
+        loudly instead of parsing a half-written container as complete."""
         if self._closed:
             return
-        if self._owns:
+        if self._staged is not None:
+            self._staged.discard()
+        elif self._owns:
             self._f.close()
         self._closed = True
 
@@ -275,10 +301,19 @@ class ContainerReader:
     Thread-safe: the only shared mutable state is the file handle, and every
     seek+read pair holds ``_io_lock``; decode itself runs on immutable record
     bytes.  Any number of threads may call ``read_chunk`` / ``read_all`` /
-    ``iter_chunks`` on one reader concurrently."""
+    ``iter_chunks`` on one reader concurrently.
 
-    def __init__(self, path_or_buf):
+    ``salvage=True`` opens a *damaged* container through the salvage engine
+    (``reliability.repair``): the reader then serves exactly the intact
+    chunks (every record re-validated by CRC32 + structural parse, never
+    wrong bytes) even when the index/footer is corrupt or truncated away;
+    the analysis is exposed as ``.salvage_report``.  The default strict
+    mode keeps refusing damaged files at open."""
+
+    def __init__(self, path_or_buf, salvage: bool = False):
         self._io_lock = threading.Lock()
+        self._label = None
+        self.salvage_report = None
         if isinstance(path_or_buf, (bytes, bytearray, memoryview)):
             self._f = _io.BytesIO(bytes(path_or_buf))
             self._owns = True
@@ -286,34 +321,71 @@ class ContainerReader:
             self._f = path_or_buf
             self._owns = False
         else:
+            self._label = str(path_or_buf)
             self._f = open(Path(path_or_buf), "rb")
             self._owns = True
+        try:
+            self._open(salvage)
+        except ContainerError as e:
+            if self._owns:
+                self._f.close()
+            if self._label is not None and self._label not in str(e):
+                # degenerate inputs (empty file, truncated file, non-
+                # container bytes, missing backend) must name the path
+                # they came from
+                raise type(e)(f"{self._label}: {e}") from None
+            raise
 
-        self._f.seek(0, 2)
-        size = self._f.tell()
-        if size < F.FOOTER_SIZE + len(F.MAGIC):
-            raise F.ContainerFormatError("file too small to be a container")
-        self._f.seek(size - F.FOOTER_SIZE)
-        index_off, index_crc, nchunks = F.decode_footer(
-            self._f.read(F.FOOTER_SIZE)
-        )
-        if index_off >= size - F.FOOTER_SIZE:
-            raise F.ContainerFormatError("container index offset out of range")
+    def _open(self, salvage: bool) -> None:
+        if salvage:
+            from ..reliability import repair as _repair
 
-        self._f.seek(0)
-        head = self._f.read(min(size, 1024))
-        cur = F._Cursor(head)
-        self.header = F.decode_header(cur)
+            with self._io_lock:
+                self._f.seek(0)
+                buf = self._f.read()
+            report = _repair.salvage(buf)
+            if not report.header_ok:
+                raise F.ContainerFormatError(
+                    "salvage failed: container header unreadable "
+                    f"({report.damage[0].detail})"
+                )
+            self.salvage_report = report
+            self.header = report.header
+            self._entries = list(report.entries)
+            self.user_meta = report.user_meta
+        else:
+            self._f.seek(0, 2)
+            size = self._f.tell()
+            if size == 0:
+                raise F.ContainerFormatError("file is empty, not a container")
+            if size < F.FOOTER_SIZE + len(F.MAGIC):
+                raise F.ContainerFormatError(
+                    f"file too small to be a container ({size} bytes; even "
+                    f"an empty container holds > {F.FOOTER_SIZE + len(F.MAGIC)})"
+                )
+            self._f.seek(size - F.FOOTER_SIZE)
+            index_off, index_crc, nchunks = F.decode_footer(
+                self._f.read(F.FOOTER_SIZE)
+            )
+            if index_off >= size - F.FOOTER_SIZE:
+                raise F.ContainerFormatError(
+                    "container index offset out of range"
+                )
+
+            self._f.seek(0)
+            head = self._f.read(min(size, 1024))
+            cur = F._Cursor(head)
+            self.header = F.decode_header(cur)
+
+            self._f.seek(index_off)
+            index_buf = self._f.read(size - F.FOOTER_SIZE - index_off)
+            if zlib.crc32(index_buf) != index_crc:
+                raise F.ChecksumError("container index checksum mismatch")
+            self._entries, self.user_meta = F.decode_index(index_buf, nchunks)
         self.spec_name = self.header["spec_name"]
         self.backend = self.header["backend"]
         self.dtype = F.resolve_dtype(self.header["dtype"])
         self._be = get_backend(self.backend)
-
-        self._f.seek(index_off)
-        index_buf = self._f.read(size - F.FOOTER_SIZE - index_off)
-        if zlib.crc32(index_buf) != index_crc:
-            raise F.ChecksumError("container index checksum mismatch")
-        self._entries, self.user_meta = F.decode_index(index_buf, nchunks)
 
     @property
     def nchunks(self) -> int:
@@ -407,9 +479,17 @@ class ContainerReader:
             while nxt < n and len(pending) < prefetch:
                 pending.append(pool.submit(self.read_chunk, nxt))
                 nxt += 1
+            idx = 0
             while pending:
                 fut = pending.pop(0)
-                chunk = fut.result()  # re-raises the worker's exception
+                # worker exceptions re-raise here; a WEDGED worker instead
+                # trips the watchdog and the chunk is re-decoded serially
+                # in this thread (byte-identical — same record bytes)
+                chunk = _watchdog.await_or_fallback(
+                    fut, lambda i=idx: self.read_chunk(i),
+                    f"prefetched chunk {idx}",
+                )
+                idx += 1
                 if nxt < n:
                     pending.append(pool.submit(self.read_chunk, nxt))
                     nxt += 1
@@ -417,10 +497,14 @@ class ContainerReader:
         finally:
             # drain, don't abandon: a future that can't be cancelled is
             # already running — wait it out (and discard its result/error)
-            # so no worker races a subsequent close() of this reader
+            # so no worker races a subsequent close() of this reader; a
+            # WEDGED worker is only waited for up to the watchdog bound
             for fut in pending:
                 if not fut.cancel():
-                    fut.exception()
+                    try:
+                        fut.exception(timeout=_watchdog.span_timeout())
+                    except _watchdog.FutureTimeout:
+                        pass
             if own_pool is not None:
                 own_pool.shutdown(wait=True)
 
@@ -486,13 +570,27 @@ class ContainerReader:
         nw = min(workers or default_decode_workers(), n_chunks)
         spans = [range(k * n_chunks // nw, (k + 1) * n_chunks // nw)
                  for k in range(nw)]
+
+        def drain(pool) -> None:
+            futs = [pool.submit(decode_span, span) for span in spans]
+            for k, fut in enumerate(futs):
+                # a wedged worker degrades this span to a serial re-decode
+                # in the caller (watchdog); each chunk lands at its index-
+                # derived offset either way, so even a worker that wakes up
+                # late writes the same bytes — the result stays identical
+                _watchdog.await_or_fallback(
+                    fut, lambda k=k: decode_span(spans[k]),
+                    f"decode span {k + 1}/{len(spans)} "
+                    f"(chunks {spans[k].start}..{spans[k].stop - 1})",
+                )
+
         if workers is not None:
             with ThreadPoolExecutor(
                 max_workers=workers, thread_name_prefix=_POOL_THREAD_PREFIX
             ) as pool:
-                list(pool.map(decode_span, spans))
+                drain(pool)
         else:
-            list(shared_decode_pool().map(decode_span, spans))
+            drain(shared_decode_pool())
         return out
 
     def close(self) -> None:

@@ -32,7 +32,13 @@ class ShardStore:
         return self.root / f"{name}.fpc"
 
     def write(self, name: str, x: np.ndarray, chunk: int = 65536,
-              method: str = "auto") -> dict:
+              method: str = "auto", durable: bool = True) -> dict:
+        """Write one shard **atomically and durably**: bytes stage to a
+        same-directory temp file and only an fsynced, complete container is
+        renamed onto ``<name>.fpc`` — a failed or crashed write (injected
+        backend fault, ENOSPC, kill -9) leaves any previous version of the
+        shard bitwise intact (tests/test_reliability.py,
+        tests/test_crash_matrix.py)."""
         flat = np.ascontiguousarray(x).reshape(-1)
         nchunks = max(1, -(-flat.size // chunk))
         with ContainerWriter(
@@ -40,6 +46,7 @@ class ShardStore:
             dtype=x.dtype,
             backend=self.backend,
             method=method,
+            durable=durable,
             user_meta={
                 "dtype": str(x.dtype),
                 "shape": list(x.shape),

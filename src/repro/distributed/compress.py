@@ -50,36 +50,66 @@ WIRE_CHUNK = 65536
 
 
 def bucket_to_wire(x: np.ndarray, chunk: int = WIRE_CHUNK,
-                   method: str = "auto", backend: str = "zlib") -> bytes:
+                   method: str = "auto", backend: str = "zlib",
+                   retry=None) -> bytes:
     """Bucket -> multi-chunk container blob for the cross-pod DCN path.
 
     Chunked (unlike :func:`repro.container.dumps`, which frames one record)
     so the receiver's parallel reader can overlap backend decompression of
-    chunk k+1 with the inverse transform of chunk k."""
-    from ..container import ContainerWriter
+    chunk k+1 with the inverse transform of chunk k.
 
-    import io as _io
+    ``retry`` (a :class:`repro.reliability.RetryPolicy`) re-runs the encode
+    on the policy's transient exception classes (``OSError`` by default)
+    with bounded, deterministic backoff — the wire path's answer to flaky
+    spooling/staging layers under it.  Corruption-class errors are never
+    retried unless the policy names them explicitly."""
 
-    flat = np.ascontiguousarray(np.asarray(x, np.float32)).reshape(-1)
-    bio = _io.BytesIO()
-    with ContainerWriter(
-        bio, dtype=np.float32, backend=backend, method=method,
-        user_meta={"shape": list(np.shape(x))},
-    ) as w:
-        for s in range(0, flat.size, chunk):
-            w.append(flat[s : s + chunk])
-    return bio.getvalue()
+    def encode() -> bytes:
+        from ..container import ContainerWriter
+
+        import io as _io
+
+        flat = np.ascontiguousarray(np.asarray(x, np.float32)).reshape(-1)
+        bio = _io.BytesIO()
+        with ContainerWriter(
+            bio, dtype=np.float32, backend=backend, method=method,
+            user_meta={"shape": list(np.shape(x))},
+        ) as w:
+            for s in range(0, flat.size, chunk):
+                w.append(flat[s : s + chunk])
+        return bio.getvalue()
+
+    if retry is None:
+        return encode()
+    from ..reliability import retry_call
+
+    return retry_call(encode, policy=retry, label="bucket_to_wire")
 
 
-def bucket_from_wire(blob: bytes, parallel: bool | str = "auto") -> np.ndarray:
+def bucket_from_wire(blob, parallel: bool | str = "auto",
+                     retry=None) -> np.ndarray:
     """Inverse of :func:`bucket_to_wire`; ``parallel="auto"`` decodes large
-    buckets' chunks concurrently (byte-identical, order-preserving)."""
-    from ..container import ContainerReader
+    buckets' chunks concurrently (byte-identical, order-preserving).
 
-    with ContainerReader(blob) as r:
-        flat = r.read_all(parallel=parallel)
-        shape = r.user_meta.get("shape", [flat.size])
-    return flat.reshape(shape)
+    ``blob`` may also be a zero-argument callable returning the bytes (a
+    fetch from the transport); with ``retry`` set, transient fetch/decode
+    failures matching the policy are retried with deterministic backoff —
+    each attempt re-fetches through the callable."""
+
+    def decode() -> np.ndarray:
+        from ..container import ContainerReader
+
+        raw = blob() if callable(blob) else blob
+        with ContainerReader(raw) as r:
+            flat = r.read_all(parallel=parallel)
+            shape = r.user_meta.get("shape", [flat.size])
+        return flat.reshape(shape)
+
+    if retry is None:
+        return decode()
+    from ..reliability import retry_call
+
+    return retry_call(decode, policy=retry, label="bucket_from_wire")
 
 
 def bucket_report(x: np.ndarray) -> dict:

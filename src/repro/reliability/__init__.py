@@ -1,0 +1,25 @@
+"""Reliability subsystem: the failure-model layer under every persistence
+surface (``docs/reliability.md``).
+
+* :mod:`.durable` — durable atomic writes (stage + fsync + rename +
+  directory fsync): a destination is always the previous or the new
+  version, never partial.
+* :mod:`.repair` — container salvage: recover every intact chunk from a
+  damaged/truncated container, with a structured damage report.
+* :mod:`.retry` — bounded retry with deterministic backoff for transient
+  I/O.
+* :mod:`.watchdog` — decode-pool watchdog: parallel reads degrade to
+  serial re-decode instead of hanging on a wedged worker.
+* :mod:`.faults` — deterministic fault injection (counted failures, crash
+  points, latency) powering the fault/crash test matrix.
+"""
+from .durable import (  # noqa: F401
+    DurableFile,
+    durable_write,
+    fsync_dir,
+    replace_dir,
+    write_bytes,
+)
+from .repair import Damage, SalvageReport, salvage, salvaged_bytes  # noqa: F401
+from .retry import DEFAULT_POLICY, RetryPolicy, retry_call  # noqa: F401
+from .watchdog import span_timeout  # noqa: F401

@@ -1,0 +1,218 @@
+"""Deterministic fault injection for the storage/reliability test surface.
+
+Everything here is *counted*, never random: a fault fires on the Nth call
+of a named operation, so a failing test reproduces from its printed
+parameters alone.  Three families:
+
+* **Crash points** — named locations inside the durable-write machinery
+  (``maybe_crash("durable.synced")`` etc.).  When armed, the Nth hit of the
+  point hard-kills the process with ``SIGKILL`` — the closest in-process
+  approximation of a power cut / OOM-kill for the crash-matrix tests.
+  Disarmed (the default), a crash point is one ``is None`` check.
+* **Faulty files** — :class:`FaultyFile` wraps a real file object and makes
+  its Nth ``write`` fail: short write then ``ENOSPC``, a raised exception,
+  or injected latency.
+* **Flaky / slow callables** — :class:`FlakyCallable` (fail the first N
+  calls, then succeed: the retry-policy test shape) and
+  :class:`SlowCallable` (delay the Nth call: the decode-watchdog test
+  shape), plus :func:`failing_backend` / :func:`slow_backend` which wrap a
+  registered container backend with those behaviors.
+"""
+from __future__ import annotations
+
+import errno
+import os
+import signal
+import threading
+import time
+
+# ---------------------------------------------------------------------------
+# crash points
+# ---------------------------------------------------------------------------
+
+_crash_lock = threading.Lock()
+_crash_plan: tuple[str, int] | None = None  # (point name, 1-based hit count)
+_crash_hits: dict[str, int] = {}
+
+# the subprocess crash matrix arms points via the environment (must be set
+# before the child writes anything); in-process tests use set_crash_plan()
+_env_plan = os.environ.get("REPRO_CRASH_POINT")
+if _env_plan:
+    _name, _, _k = _env_plan.partition(":")
+    _crash_plan = (_name, int(_k or 1))
+
+
+def set_crash_plan(point: str | None, hit: int = 1) -> None:
+    """Arm (or with ``None`` disarm) a crash point: the ``hit``-th call of
+    :func:`maybe_crash` with that name SIGKILLs the process."""
+    global _crash_plan
+    with _crash_lock:
+        _crash_plan = None if point is None else (point, int(hit))
+        _crash_hits.clear()
+
+
+def crash_points_armed() -> bool:
+    return _crash_plan is not None
+
+
+def maybe_crash(point: str) -> None:
+    """Hard-kill the process if ``point`` is armed and this is the Nth hit.
+
+    ``SIGKILL`` (never an exception) so no ``finally:``/``atexit`` cleanup
+    runs — exactly the situation durable writes must survive."""
+    plan = _crash_plan
+    if plan is None:
+        return
+    name, hit = plan
+    if name != point:
+        return
+    with _crash_lock:
+        _crash_hits[point] = _crash_hits.get(point, 0) + 1
+        fire = _crash_hits[point] == hit
+    if fire:
+        os.kill(os.getpid(), signal.SIGKILL)
+
+
+# ---------------------------------------------------------------------------
+# faulty file objects
+# ---------------------------------------------------------------------------
+
+
+class FaultyFile:
+    """Wrap a writable file object; the ``fail_on``-th ``write`` call fails.
+
+    ``mode="enospc"`` writes the first ``len(b) // 2`` bytes (a short write:
+    what a full disk actually does) and then raises ``OSError(ENOSPC)``;
+    ``mode="raise"`` raises ``exc`` without writing; ``mode="slow"`` sleeps
+    ``delay`` seconds before writing normally (latency injection).
+    """
+
+    def __init__(self, f, fail_on: int, mode: str = "enospc",
+                 exc: BaseException | None = None, delay: float = 0.0):
+        if mode not in ("enospc", "raise", "slow"):
+            raise ValueError(f"unknown FaultyFile mode {mode!r}")
+        self._f = f
+        self._fail_on = int(fail_on)
+        self._mode = mode
+        self._exc = exc
+        self._delay = delay
+        self.writes = 0
+
+    def write(self, b):
+        self.writes += 1
+        if self.writes == self._fail_on:
+            if self._mode == "enospc":
+                self._f.write(b[: len(b) // 2])  # short write, then fail
+                raise OSError(errno.ENOSPC, "injected: no space left on device")
+            if self._mode == "raise":
+                raise self._exc or OSError("injected write failure")
+            time.sleep(self._delay)
+        return self._f.write(b)
+
+    def __getattr__(self, name):
+        return getattr(self._f, name)
+
+
+# ---------------------------------------------------------------------------
+# flaky / slow callables
+# ---------------------------------------------------------------------------
+
+
+class FlakyCallable:
+    """Raise ``exc`` on the first ``fail_times`` calls, then delegate —
+    the canonical transient-failure shape for retry-policy tests."""
+
+    def __init__(self, fn, fail_times: int,
+                 exc: BaseException | None = None):
+        self._fn = fn
+        self._fail_times = int(fail_times)
+        self._exc = exc
+        self.calls = 0
+
+    def __call__(self, *args, **kw):
+        self.calls += 1
+        if self.calls <= self._fail_times:
+            raise self._exc or OSError("injected transient failure")
+        return self._fn(*args, **kw)
+
+
+class SlowCallable:
+    """Sleep ``delay`` seconds on the ``slow_on``-th call (0 = every call),
+    then delegate — wedged-worker injection for the decode watchdog."""
+
+    def __init__(self, fn, delay: float, slow_on: int = 0):
+        self._fn = fn
+        self._delay = float(delay)
+        self._slow_on = int(slow_on)
+        self.calls = 0
+        self._lock = threading.Lock()
+
+    def __call__(self, *args, **kw):
+        with self._lock:
+            self.calls += 1
+            calls = self.calls
+        if self._slow_on == 0 or calls == self._slow_on:
+            time.sleep(self._delay)
+        return self._fn(*args, **kw)
+
+
+# ---------------------------------------------------------------------------
+# backend wrappers (container-layer injection)
+# ---------------------------------------------------------------------------
+
+
+def failing_backend(name: str, base: str = "zlib", *, fail_on: int = 1,
+                    op: str = "compress", exc: BaseException | None = None):
+    """Register backend ``name`` that behaves like ``base`` except its
+    ``fail_on``-th ``op`` call raises.  Returns the :class:`FlakyCallable`
+    wrapper (whose ``calls`` counter the test can inspect)."""
+    from ..container.backends import get_backend, register_backend
+
+    b = get_backend(base)
+    wrapped = FlakyCallable(getattr(b, op), 0, exc)
+    # fire exactly ON the Nth call, not on the first N: fail_times is
+    # repurposed as a single trigger index via a shim
+    trigger = int(fail_on)
+
+    def call(*args):
+        wrapped.calls += 1
+        if wrapped.calls == trigger:
+            raise exc or OSError(f"injected {op} failure (call {trigger})")
+        return getattr(b, op)(*args)
+
+    slots = {
+        "compress": b.compress,
+        "decompress": b.decompress,
+        "decompress_capped": b.decompress_capped,
+        "decompress_into": b.decompress_into,
+    }
+    slots[op] = call
+    register_backend(name, slots["compress"], slots["decompress"],
+                     slots["decompress_capped"], slots["decompress_into"])
+    return wrapped
+
+
+def slow_backend(name: str, base: str = "zlib", *, delay: float,
+                 slow_on: int = 0):
+    """Register backend ``name`` = ``base`` with ``delay`` seconds injected
+    into the ``slow_on``-th decompress-family call (0 = every call) —
+    the wedged-decoder shape for watchdog tests.  Returns the shared
+    :class:`SlowCallable` gate (one counter across all decompress slots)."""
+    from ..container.backends import get_backend, register_backend
+
+    b = get_backend(base)
+    gate = SlowCallable(lambda: None, delay, slow_on)
+
+    def wrap(fn):
+        if fn is None:
+            return None
+
+        def call(*args):
+            gate()
+            return fn(*args)
+
+        return call
+
+    register_backend(name, b.compress, wrap(b.decompress),
+                     wrap(b.decompress_capped), wrap(b.decompress_into))
+    return gate

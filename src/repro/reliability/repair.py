@@ -1,0 +1,279 @@
+"""Container salvage: recover every intact chunk from a damaged container.
+
+A container's chunk records are self-delimiting (u64 length prefix) and
+independently CRC32-checksummed, so one flipped byte — or a truncated-away
+index/footer — must not cost more than the record it actually hit.  The
+normal reader refuses damaged files at open (correct for production reads:
+silence is the enemy); :func:`salvage` is the recovery path:
+
+* **forward walk** from the header using the per-record length prefixes,
+  validating each record independently (CRC32 + full structural parse);
+* **resynchronization** after a bad record: first via the footer index's
+  offsets when the index still parses, else by scanning forward for the
+  next byte offset that frames a CRC-valid record (a 2^-32 false-positive
+  rate per candidate offset — effectively exact);
+* works with **no footer/index at all** (truncated file): the walk simply
+  runs until record framing ends.
+
+The result is a :class:`SalvageReport` — the intact chunks (as reader-style
+index entries) plus a structured damage list — consumed by
+``ContainerReader(path, salvage=True)`` (decode the survivors through the
+normal API) and by ``python -m repro.container.scrub`` (verify/repair a
+tree of ``.fpc`` files, rewriting a clean container from the survivors).
+"""
+from __future__ import annotations
+
+import dataclasses
+import struct
+import zlib
+from pathlib import Path
+
+import numpy as np
+
+from ..container import format as F
+
+# a structurally minimal record: method id + reserved + n + n_active + ndim
+# + params count + 3 empty streams + empty payload + crc32
+_MIN_RECORD = 1 + 1 + 8 + 8 + 1 + 1 + 4 * 3 + 8 + 4
+
+
+@dataclasses.dataclass(frozen=True)
+class Damage:
+    """One damaged/unrecoverable region of the file."""
+
+    offset: int          # first byte of the damaged region
+    length: int          # bytes until the walk resynchronized (0 = unknown)
+    kind: str            # "record" | "index" | "footer" | "header" | "tail"
+    detail: str
+
+    def __str__(self) -> str:
+        return f"[{self.kind}] @{self.offset}+{self.length}: {self.detail}"
+
+
+@dataclasses.dataclass
+class SalvageReport:
+    """Everything recoverable from one container, plus what was lost."""
+
+    size: int
+    header: dict | None                  # parsed header, None if unreadable
+    entries: list[dict]                  # reader-style index entries, intact
+    user_meta: dict                      # {} when the index was unreadable
+    damage: list[Damage]
+    index_ok: bool                       # footer+index parsed and CRC-clean
+    expected_chunks: int | None          # from the index when index_ok
+
+    @property
+    def header_ok(self) -> bool:
+        return self.header is not None
+
+    @property
+    def ok(self) -> bool:
+        """True iff the file needed no salvage at all."""
+        return (self.header_ok and self.index_ok and not self.damage
+                and (self.expected_chunks is None
+                     or self.expected_chunks == len(self.entries)))
+
+    def summary(self) -> str:
+        exp = self.expected_chunks
+        lost = "" if exp is None else f"/{exp}"
+        return (f"{len(self.entries)}{lost} chunk(s) intact, "
+                f"{len(self.damage)} damaged region(s)"
+                + ("" if self.index_ok else ", index/footer unreadable"))
+
+
+def _parse_record(body: bytes) -> dict:
+    """Full structural parse of a CRC-clean record body -> index entry
+    fields.  Raises ContainerFormatError on any framing violation (a
+    CRC-valid but structurally nonsensical record is NOT intact)."""
+    cur = F._Cursor(body)
+    method_id = cur.u8()
+    cur.u8()  # reserved
+    n = cur.u64()
+    n_active = cur.u64()
+    ndim = cur.u8()
+    shape = tuple(cur.u64() for _ in range(ndim))
+    if int(np.prod(shape, dtype=np.int64)) != n:
+        raise F.ContainerFormatError(f"shape {shape} does not hold n={n}")
+    if method_id == F.RAW_METHOD_ID:
+        if cur.u8() != 0 or cur.bytes32() or cur.bytes32() or cur.bytes32():
+            raise F.ContainerFormatError("raw chunk carries transform fields")
+    else:
+        method = F.METHOD_NAMES.get(method_id)
+        if method is None:
+            raise F.ContainerFormatError(f"unknown method id {method_id}")
+        F._dec_params(cur)
+        F._META_CODECS[method][1](cur, n_active)
+        cur.bytes32()
+        cur.bytes32()
+        cur.bytes32()
+    cur.bytes64()  # payload (decompression deferred to the reader)
+    if cur.pos != len(body):
+        raise F.ContainerFormatError(
+            f"{len(body) - cur.pos} trailing bytes after record"
+        )
+    return {"n": n, "method_id": method_id}
+
+
+def _validate_record_at(buf: bytes, pos: int, end: int) -> dict | None:
+    """If ``buf[pos:]`` frames one intact record within ``end``, return its
+    index entry; else None.  Intact = plausible length prefix + CRC32 match
+    + full structural parse."""
+    if pos + 8 > end:
+        return None
+    (ln,) = struct.unpack_from("<Q", buf, pos)
+    if ln < _MIN_RECORD - 8 or ln > F._MAX_LEN or pos + 8 + ln > end:
+        return None
+    body, crc_bytes = (buf[pos + 8 : pos + 8 + ln - 4],
+                       buf[pos + 8 + ln - 4 : pos + 8 + ln])
+    if zlib.crc32(body) != struct.unpack("<I", crc_bytes)[0]:
+        return None
+    try:
+        fields = _parse_record(body)
+    except F.ContainerError:
+        return None
+    return {"offset": pos, "length": int(ln), **fields}
+
+
+def _try_index(buf: bytes) -> tuple[list[dict] | None, dict, int | None]:
+    """Parse footer+index if still intact -> (entries, user_meta, index_off);
+    (None, {}, None) when anything about them is unreadable."""
+    try:
+        index_off, index_crc, nchunks = F.decode_footer(buf[-F.FOOTER_SIZE:])
+        if index_off >= len(buf) - F.FOOTER_SIZE:
+            return None, {}, None
+        index_buf = buf[index_off : len(buf) - F.FOOTER_SIZE]
+        if zlib.crc32(index_buf) != index_crc:
+            return None, {}, None
+        entries, user_meta = F.decode_index(index_buf, nchunks)
+        return entries, user_meta, index_off
+    except F.ContainerError:
+        return None, {}, None
+
+
+def salvage(path_or_bytes) -> SalvageReport:
+    """Forward-walk ``path_or_bytes`` and recover every intact chunk record.
+
+    Never raises on damage — damage is the *output* (the report).  Only a
+    file whose bytes cannot be read at all (I/O error on a path) raises.
+    """
+    if isinstance(path_or_bytes, (bytes, bytearray, memoryview)):
+        buf = bytes(path_or_bytes)
+    else:
+        buf = Path(path_or_bytes).read_bytes()
+    size = len(buf)
+    damage: list[Damage] = []
+
+    # -- header --------------------------------------------------------------
+    try:
+        cur = F._Cursor(buf[: min(size, 1024)])
+        header = F.decode_header(cur)
+        records_start = cur.pos
+    except F.ContainerError as e:
+        return SalvageReport(
+            size=size, header=None, entries=[], user_meta={},
+            damage=[Damage(0, size, "header", str(e))],
+            index_ok=False, expected_chunks=None,
+        )
+
+    # -- footer/index (best effort: resync hints + expected-chunk count) -----
+    index_entries, user_meta, index_off = _try_index(buf)
+    index_ok = index_entries is not None
+    end = index_off if index_ok else size
+    hint_offsets = (sorted(e["offset"] for e in index_entries)
+                    if index_ok else [])
+
+    # -- forward walk with resynchronization ---------------------------------
+    entries: list[dict] = []
+    pos = records_start
+    while pos < end:
+        ent = _validate_record_at(buf, pos, end)
+        if ent is not None:
+            entries.append(ent)
+            pos += 8 + ent["length"]
+            continue
+        # damaged at pos: resync to the next offset that frames an intact
+        # record — indexed offsets first (exact when the index survived),
+        # then a byte scan (exact up to a 2^-32 CRC coincidence)
+        bad_at = pos
+        nxt = None
+        resumed = None
+        for q in hint_offsets:
+            if q <= pos:
+                continue
+            resumed = _validate_record_at(buf, q, end)
+            if resumed is not None:
+                nxt = q
+                break
+        if nxt is None:
+            for q in range(pos + 1, end - _MIN_RECORD + 1):
+                resumed = _validate_record_at(buf, q, end)
+                if resumed is not None:
+                    nxt = q
+                    break
+        if nxt is None:
+            kind = "record" if index_ok else "tail"
+            damage.append(Damage(
+                bad_at, end - bad_at, kind,
+                "no intact record framing past this point"
+                + ("" if index_ok else
+                   " (and no readable index to delimit the record region)"),
+            ))
+            pos = end
+            break
+        damage.append(Damage(
+            bad_at, nxt - bad_at, "record",
+            "record here fails CRC/framing; resynchronized at next "
+            "intact record",
+        ))
+        entries.append(resumed)
+        pos = nxt + 8 + resumed["length"]
+
+    if not index_ok:
+        damage.append(Damage(
+            end, size - end if size > end else 0, "footer",
+            "footer/index unreadable — chunk count and user metadata lost "
+            "(recovered chunks re-indexed by walk order)",
+        ))
+    else:
+        # cross-check: indexed records the walk did not recover are damage
+        # (they may sit inside a region the walk skipped in one span)
+        got = {e["offset"] for e in entries}
+        for e in index_entries:
+            if e["offset"] not in got and not any(
+                d.offset <= e["offset"] < d.offset + max(d.length, 1)
+                for d in damage
+            ):
+                damage.append(Damage(
+                    e["offset"], e["length"] + 8, "record",
+                    "record listed in the index but not intact on disk",
+                ))
+
+    return SalvageReport(
+        size=size, header=header, entries=entries, user_meta=user_meta,
+        damage=damage, index_ok=index_ok,
+        expected_chunks=len(index_entries) if index_ok else None,
+    )
+
+
+def salvaged_bytes(report: SalvageReport, buf: bytes) -> bytes:
+    """Re-emit a clean, fully-indexed container holding exactly the intact
+    chunks of ``report`` (record bytes copied verbatim from ``buf``, fresh
+    index/footer).  The result decodes with the strict reader."""
+    if not report.header_ok:
+        raise F.ContainerFormatError(
+            "cannot rewrite a container whose header is unreadable"
+        )
+    h = report.header
+    out = bytearray()
+    out += F.encode_header(h["spec_name"], h["dtype"], h["backend"])
+    new_entries = []
+    for e in report.entries:
+        rec = buf[e["offset"] + 8 : e["offset"] + 8 + e["length"]]
+        new_entries.append({**e, "offset": len(out)})
+        out += struct.pack("<Q", e["length"])
+        out += rec
+    index = F.encode_index(new_entries, report.user_meta)
+    index_off = len(out)
+    out += index
+    out += F.encode_footer(index_off, zlib.crc32(index), len(new_entries))
+    return bytes(out)

@@ -1,0 +1,67 @@
+"""Bounded retry with deterministic backoff.
+
+No randomized jitter: the k-th retry of attempt stream always sleeps the
+same amount (``base_delay * 2**k``, capped), so a test that injects N
+transient failures observes exactly the same schedule every run, and two
+pods retrying the same transient never diverge in wall-clock behavior for
+reasons the logs can't explain.
+
+The policy is data (a frozen dataclass), the mechanism is
+:func:`retry_call`; consumers thread a ``RetryPolicy`` through their API
+(e.g. ``bucket_to_wire(..., retry=policy)``) instead of hardcoding loops.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+
+log = logging.getLogger("repro.reliability")
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """``attempts`` total tries (1 = no retry); exponential backoff
+    ``base_delay * 2**k`` seconds after the k-th failure, capped at
+    ``max_delay``; only exceptions matching ``retry_on`` are retried —
+    anything else (and the last attempt's failure) propagates."""
+
+    attempts: int = 3
+    base_delay: float = 0.05
+    max_delay: float = 1.0
+    retry_on: tuple[type[BaseException], ...] = (OSError,)
+
+    def delay(self, failure_index: int) -> float:
+        """Deterministic sleep after the ``failure_index``-th failure (0-based)."""
+        return min(self.base_delay * (2.0 ** failure_index), self.max_delay)
+
+
+DEFAULT_POLICY = RetryPolicy()
+
+
+def retry_call(fn, *args, policy: RetryPolicy = DEFAULT_POLICY,
+               sleep=time.sleep, label: str | None = None, **kwargs):
+    """Call ``fn(*args, **kwargs)`` under ``policy``.
+
+    Retries only ``policy.retry_on`` exceptions, sleeping the policy's
+    deterministic backoff between attempts; the final failure (or any
+    non-retryable exception) propagates unchanged.  ``sleep`` is injectable
+    for tests (pass a recorder to assert the schedule without waiting)."""
+    if policy is None or policy.attempts <= 1:
+        return fn(*args, **kwargs)
+    last: BaseException | None = None
+    for k in range(policy.attempts):
+        try:
+            return fn(*args, **kwargs)
+        except policy.retry_on as e:
+            last = e
+            if k == policy.attempts - 1:
+                raise
+            d = policy.delay(k)
+            log.warning(
+                "transient failure in %s (attempt %d/%d): %s — retrying in %.3fs",
+                label or getattr(fn, "__name__", "call"), k + 1,
+                policy.attempts, e, d,
+            )
+            sleep(d)
+    raise last  # unreachable; keeps type-checkers honest

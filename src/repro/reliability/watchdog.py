@@ -1,0 +1,53 @@
+"""Decode-pool watchdog: bound how long a parallel read waits on any one
+worker before degrading to serial re-decode.
+
+A wedged decode worker (deadlocked C extension, pathological input, a
+debugger attached to the pool) must degrade a parallel read, not hang it:
+the reader waits at most ``span_timeout()`` seconds per span future, then
+logs and re-decodes the affected span serially in the calling thread.  The
+result is byte-identical by construction — both paths write the same bytes
+to the same index-derived offsets — so a late worker completing after the
+fallback is harmless.
+
+The timeout is a module knob (env ``REPRO_DECODE_SPAN_TIMEOUT``, seconds;
+``0`` disables the watchdog) read at call time so tests and deployments can
+tighten it without reconstructing readers.
+"""
+from __future__ import annotations
+
+import logging
+import os
+from concurrent.futures import TimeoutError as FutureTimeout
+
+log = logging.getLogger("repro.reliability")
+
+# default per-span wait: generous (a span is at most a few hundred ms of
+# honest decode work — 120 s only ever fires on a genuinely wedged worker)
+DEFAULT_SPAN_TIMEOUT = 120.0
+
+_env = os.environ.get("REPRO_DECODE_SPAN_TIMEOUT")
+SPAN_TIMEOUT: float | None = float(_env) if _env else DEFAULT_SPAN_TIMEOUT
+if SPAN_TIMEOUT == 0:
+    SPAN_TIMEOUT = None  # disabled: wait forever (pre-watchdog behavior)
+
+
+def span_timeout() -> float | None:
+    """Current per-span wait bound in seconds (None = watchdog disabled)."""
+    return SPAN_TIMEOUT
+
+
+def await_or_fallback(fut, fallback, what: str):
+    """Wait on ``fut`` up to the watchdog bound; on timeout, log and run
+    ``fallback()`` (the serial re-decode) in the calling thread, returning
+    its result.  Worker exceptions re-raise here unchanged."""
+    t = span_timeout()
+    if t is None:
+        return fut.result()
+    try:
+        return fut.result(timeout=t)
+    except FutureTimeout:
+        log.warning(
+            "decode watchdog: %s not done after %.1fs — re-decoding "
+            "serially in the caller (result is byte-identical)", what, t,
+        )
+        return fallback()

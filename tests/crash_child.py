@@ -1,0 +1,71 @@
+"""Crash-matrix child: write v1 cleanly, arm a crash point, write v2.
+
+Invoked by tests/test_crash_matrix.py as::
+
+    python tests/crash_child.py <surface> <dest_dir> <point>
+
+``surface`` is ``container`` | ``shard`` | ``checkpoint``; ``point`` is a
+``reliability.faults`` crash-point name (``none`` = sanity run, no crash).
+The child first writes version 1 with crash points disarmed, then arms
+``point`` (hit counters reset) and writes version 2 — getting SIGKILLed at
+the armed boundary.  The parent asserts the destination still reads as
+exactly v1 or exactly v2.
+"""
+import sys
+
+import numpy as np
+
+
+def payload(version: int) -> np.ndarray:
+    # deterministic, version-tagged, multi-chunk at chunk=256
+    return np.arange(1024, dtype=np.float64) * version + version
+
+
+def write_container(dest, version):
+    from repro.container import ContainerWriter
+
+    x = payload(version)
+    with ContainerWriter(dest / "data.fpc", dtype=np.float64,
+                         method="identity") as w:
+        for s in range(0, x.size, 256):
+            w.append(x[s : s + 256])
+
+
+def write_shard(dest, version):
+    from repro.data.shard_store import ShardStore
+
+    ShardStore(dest).write("s", payload(version), chunk=256,
+                           method="identity")
+
+
+def write_checkpoint(dest, version):
+    from repro.checkpoint import CheckpointManager
+
+    mgr = CheckpointManager(dest, keep=10, method="identity")
+    mgr.save(version, {"w": payload(version), "b": payload(version)[:64]})
+
+
+WRITERS = {
+    "container": write_container,
+    "shard": write_shard,
+    "checkpoint": write_checkpoint,
+}
+
+
+def main() -> int:
+    from pathlib import Path
+
+    from repro.reliability import faults
+
+    surface, dest, point = sys.argv[1], Path(sys.argv[2]), sys.argv[3]
+    write = WRITERS[surface]
+    faults.set_crash_plan(None)
+    write(dest, 1)
+    if point != "none":
+        faults.set_crash_plan(point)  # counters reset; first hit is in v2
+    write(dest, 2)  # SIGKILL fires somewhere in here when armed
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -182,17 +182,29 @@ def test_empty_container(tmp_path):
 
 
 def test_interrupted_write_is_not_a_valid_container(tmp_path):
-    """__exit__ on an exception must NOT finalize: a half-written container
-    has no footer and readers reject it loudly instead of serving a
-    plausible-looking partial shard."""
+    """__exit__ on an exception must NOT finalize.  Path destinations write
+    through a same-directory staging file (durable atomic recipe), so an
+    interrupted write leaves NO file at all — nothing partial ever becomes
+    visible, and no staging litter survives.  File-object destinations keep
+    the caller's handle: their partial bytes have no footer and readers
+    reject them loudly instead of serving a plausible-looking partial
+    shard."""
     x = gas_turbine_emissions(4000)
     path = tmp_path / "crash.fpc"
     with pytest.raises(RuntimeError, match="simulated"):
         with ContainerWriter(path, dtype=np.float64) as w:
             w.append(x[:2000])
             raise RuntimeError("simulated preemption")
+    assert not path.exists()
+    assert not list(tmp_path.iterdir())
+
+    bio = io.BytesIO()
+    with pytest.raises(RuntimeError, match="simulated"):
+        with ContainerWriter(bio, dtype=np.float64) as w:
+            w.append(x[:2000])
+            raise RuntimeError("simulated preemption")
     with pytest.raises(ContainerFormatError):
-        ContainerReader(path)
+        ContainerReader(bio.getvalue())
 
 
 def test_raw_record_trailing_garbage_rejected():

@@ -151,3 +151,89 @@ def test_record_length_prefix_corruption_is_loud():
             _assert_loud_or_harmless(
                 name, bad, want, e["offset"], f"len{delta:+d}"
             )
+
+
+# ---------------------------------------------------------------------------
+# salvage: the recovery half of the corruption contract
+# ---------------------------------------------------------------------------
+#
+# For every corruption position the strict reader refuses (above), the
+# salvage engine must recover EXACTLY the untouched chunks: every record the
+# corrupted byte did not land in comes back byte-identical, and no salvaged
+# record may differ from the original bytes at its offset (never wrong
+# bytes).  Header-region corruption may make the whole file unrecoverable —
+# but only loudly (header_ok=False), never as bad data.
+
+
+def _header_len(buf: bytes) -> int:
+    with ContainerReader(buf) as r:
+        h = r.header
+    return len(F.encode_header(h["spec_name"], h["dtype"], h["backend"]))
+
+
+@pytest.mark.parametrize("name", CORPUS)
+def test_salvage_recovers_exactly_untouched_chunks(name):
+    from repro.reliability import repair
+
+    buf, _ = _reference(name)
+    with ContainerReader(buf) as r:
+        entries = list(r._entries)
+    hdr = _header_len(buf)
+    by_off = {e["offset"]: e for e in entries}
+    for pos in _positions(buf, stride_target=80):
+        bad = bytearray(buf)
+        bad[pos] ^= 0xFF
+        rep = repair.salvage(bytes(bad))  # must never raise on corruption
+        if not rep.header_ok:
+            assert pos < hdr, (
+                f"{name}: flip at {pos} outside the header killed the "
+                "header parse"
+            )
+            continue
+        got = set()
+        for se in rep.entries:
+            oe = by_off.get(se["offset"])
+            assert oe is not None and se["length"] == oe["length"], (
+                f"{name}: flip at {pos} made salvage invent a record at "
+                f"offset {se['offset']} that the original never had"
+            )
+            lo, hi = oe["offset"], oe["offset"] + 8 + oe["length"]
+            assert bytes(bad[lo:hi]) == buf[lo:hi], (
+                f"{name}: flip at {pos} let salvage return a record whose "
+                f"bytes differ from the original at offset {lo}"
+            )
+            got.add(se["offset"])
+        for e in entries:
+            lo, hi = e["offset"], e["offset"] + 8 + e["length"]
+            if lo <= pos < hi:
+                continue  # the corrupted byte landed in this record
+            assert e["offset"] in got, (
+                f"{name}: flip at {pos} lost UNTOUCHED chunk at offset "
+                f"{lo} (salvage must recover every intact record)"
+            )
+
+
+@pytest.mark.parametrize("name", CORPUS)
+def test_salvage_survives_every_truncation(name):
+    """Salvage at every record-boundary cut: all records wholly before the
+    cut are recovered, nothing past it is invented."""
+    from repro.reliability import repair
+
+    buf, _ = _reference(name)
+    with ContainerReader(buf) as r:
+        entries = list(r._entries)
+    cuts = {len(buf) - F.FOOTER_SIZE, len(buf) - 1}
+    for e in entries:
+        cuts.add(e["offset"])
+        cuts.add(e["offset"] + 8)
+        cuts.add(e["offset"] + 8 + e["length"])
+    hdr = _header_len(buf)
+    for cut in sorted(c for c in cuts if 0 <= c <= len(buf)):
+        rep = repair.salvage(buf[:cut])
+        if cut < hdr:
+            assert not rep.header_ok
+            continue
+        whole = [e for e in entries if e["offset"] + 8 + e["length"] <= cut]
+        assert [e["offset"] for e in rep.entries] == [
+            e["offset"] for e in whole
+        ], f"{name}: truncation at {cut} salvaged the wrong record set"
