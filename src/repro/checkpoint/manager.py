@@ -132,6 +132,13 @@ def save_tree(tree, directory: str | Path, extra: dict | None = None,
     leaves: list = []
     tree_spec = _tree_spec(tree, leaves)
     index = []
+    # §Perf PR 7: the selection probe (and its shape-specialized jit
+    # compiles) runs once per dtype, not once per leaf — the first probed
+    # leaf's pick is reused across the tree.  Weights/moments of one model
+    # share structure; a leaf whose data rejects the shared pick still
+    # falls back to identity per chunk (writer contract), so the save
+    # stays lossless whatever the pick.
+    tree_picks: dict[str, tuple] = {}
     for i, leaf in enumerate(leaves):
         arr = np.asarray(jax.device_get(leaf))
         if arr.dtype.kind == "O":
@@ -144,14 +151,24 @@ def save_tree(tree, directory: str | Path, extra: dict | None = None,
                 "array; custom pytree node types are not supported — "
                 "convert the tree to dict/list/tuple of arrays before saving"
             )
-        kw = {"candidates": _CKPT_CANDIDATES} if method == "auto" else {}
+        dtn = _dtype_name(arr.dtype)
+        leaf_method, kw = method, {}
+        if method == "auto":
+            shared = tree_picks.get(dtn)
+            if shared is not None and shared[0] != "auto":
+                leaf_method, prm = shared
+                kw = {"params": prm} if prm else {}
+            else:
+                kw = {"candidates": _CKPT_CANDIDATES}
         with ContainerWriter(tmp / f"arr_{i}.fpc", dtype=arr.dtype,
-                             method=method, **kw) as w:
+                             method=leaf_method, **kw) as w:
             flat = arr.reshape(-1)
             for s in range(0, flat.size, CHUNK):
                 w.append(flat[s : s + CHUNK])
             chunks = w.chunks
             kind = w.kind
+        if method == "auto" and dtn not in tree_picks and w._picked:
+            tree_picks[dtn] = w._picked
         index.append({
             "shape": list(arr.shape),
             "dtype": _dtype_name(arr.dtype),

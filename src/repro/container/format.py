@@ -390,7 +390,14 @@ def serialize_chunk(enc: Encoded, backend: str | Backend = "zlib") -> bytes:
     _w_bytes32(b, enc.exponents_z)
     _w_bytes32(b, enc.signs_z)
     _w_bytes32(b, enc.passthrough_z)
-    _w_bytes64(b, be.compress(np.ascontiguousarray(data).tobytes()))
+    payload = getattr(enc, "payload", None)
+    if payload is not None and getattr(enc, "payload_backend", "") == be.name:
+        # fused device encode already produced this backend's framed stream
+        # (byte-identical to compressing ``data`` here — the frame is
+        # producer-agnostic, docs/format.md); ship it without re-compressing
+        _w_bytes64(b, payload)
+    else:
+        _w_bytes64(b, be.compress(np.ascontiguousarray(data).tobytes()))
     _w_u32(b, zlib.crc32(b))  # crc32 reads the bytearray buffer, no copy
     return bytes(b)
 

@@ -190,7 +190,7 @@ class ContainerWriter:
                     # payload will feed — selection sizes candidates with it
                     self._picked = pipeline.select_method(
                         sample, candidates=self._candidates, spec=self._spec,
-                        backend=self._backend.name,
+                        backend=self._backend.name, use_cache=True,
                     )
                 except T.TransformError:
                     self._picked = ("auto", None)
@@ -201,32 +201,42 @@ class ContainerWriter:
                     flat, method="auto", candidates=self._candidates,
                     spec=self._spec, backend=self._backend.name,
                 )
-            return pipeline.apply_transform(flat, name, prm, spec=self._spec)
+            return pipeline.apply_transform(flat, name, prm, spec=self._spec,
+                                            backend=self._backend.name)
         except Exception:
             if not self._fallback_identity:
                 raise
             # picked transform rejected this chunk's data: lossless fallback
-            return pipeline.apply_transform(flat, "identity", spec=self._spec)
+            return pipeline.apply_transform(flat, "identity", spec=self._spec,
+                                            backend=self._backend.name)
 
     # -- public API ---------------------------------------------------------
 
     def append(self, chunk) -> dict:
-        """Encode + serialize one chunk; returns {method, raw, comp}."""
+        """Encode + serialize one chunk; returns {method, raw, comp}.
+
+        Device arrays (anything exposing ``.dtype``/``.size``) are accepted
+        without an eager ``np.asarray``: the encode path decides when (and
+        whether) to materialize host bytes, so a fused rans-backend encode
+        keeps the chunk device-resident through transform + entropy coding."""
         if self._closed:
             raise ContainerError("writer is closed")
         _faults.maybe_crash("container.append")
-        arr = np.asarray(chunk)
-        if F.dtype_name(arr.dtype) != self._dtype_name:
+        dt = getattr(chunk, "dtype", None)
+        if dt is None or self._spec is None:
+            chunk = np.asarray(chunk)
+            dt = chunk.dtype
+        if F.dtype_name(dt) != self._dtype_name:
             raise ContainerError(
-                f"chunk dtype {arr.dtype} does not match container dtype "
+                f"chunk dtype {dt} does not match container dtype "
                 f"{self._dtype_name!r} — a container holds one dtype"
             )
         if self._spec is None:
-            rec = F.serialize_raw_chunk(arr, self._backend)
-            return self._write_record(rec, arr.size, "raw")
-        enc = self._encode(arr)
+            rec = F.serialize_raw_chunk(chunk, self._backend)
+            return self._write_record(rec, chunk.size, "raw")
+        enc = self._encode(chunk)
         rec = F.serialize_chunk(enc, self._backend)
-        return self._write_record(rec, arr.size, enc.method)
+        return self._write_record(rec, int(chunk.size), enc.method)
 
     def append_encoded(self, enc: pipeline.Encoded) -> dict:
         """Serialize an already-encoded chunk (must match the container spec)."""

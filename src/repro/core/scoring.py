@@ -90,6 +90,31 @@ PHASE1 = Phase1Stats()
 
 
 @dataclasses.dataclass
+class Phase2Stats:
+    """Observable phase-2 (winner apply + pack + entropy encode) cost model,
+    same contract as :class:`Phase1Stats`: cumulative counters, callers
+    reset.  The fused encode path must show exactly (1, 1, 0) per encoded
+    chunk — one jitted transform+pack+rANS dispatch, one ``device_get`` of
+    the emission buffers, zero host fallbacks — asserted in
+    tests/test_pipeline_fused.py and compared exactly by the CI bench
+    gate (``encode_dispatches`` / ``encode_device_gets``)."""
+
+    dispatches: int = 0     # fused encode jit invocations
+    device_gets: int = 0    # host fetches of fused encode results
+    # encodes that could not fuse (transform needs host-side scheduling,
+    # non-rans backend, ...) and took the eager multi-dispatch path instead
+    fallbacks: int = 0
+
+    def reset(self) -> None:
+        self.dispatches = 0
+        self.device_gets = 0
+        self.fallbacks = 0
+
+
+PHASE2 = Phase2Stats()
+
+
+@dataclasses.dataclass
 class CandidateScore:
     """One candidate's phase-1 (analytic) scoring result."""
 
@@ -109,6 +134,10 @@ class CandidateScore:
     # finalist re-scoring and the metadata probe never re-run a forward
     words: object = None
     meta_streams: object = None
+    # stacked engine only: the candidate's pooled byte histogram (int[256]),
+    # retained from the same grid fetch — the rANS statistics pass for
+    # finalist re-scoring (ops.compress(counts=...) skips its own bincount)
+    byte_hist: object = None
     # device handles kept so the engine can fetch all scores in ONE round-trip
     _dev: object = None
 
@@ -457,8 +486,10 @@ def _grid_score(Xs, x_min, dyn, spec: FloatSpec, plan: tuple):
     lanes ``[data_bits, fixed_meta_bits, per_sample_meta_bits, valid,
     byte_bits, table_syms]``, the stacked word grid itself (retained so
     finalist re-scoring reuses the already-transformed streams instead of
-    re-running forwards), and each candidate's per-sample metadata arrays
-    (sse chunk-ids/evenness, cb shifts/floors) for the metadata probe."""
+    re-running forwards), the per-candidate pooled byte histograms (the
+    rANS statistics pass, retained for the same reason), and each
+    candidate's per-sample metadata arrays (sse chunk-ids/evenness, cb
+    shifts/floors) for the metadata probe."""
     words, fixed, psamp, valid, extras = [], [], [], [], []
     for entry, d in zip(plan, dyn):
         fam = entry[0]
@@ -493,7 +524,7 @@ def _grid_score(Xs, x_min, dyn, spec: FloatSpec, plan: tuple):
         byte_entropy_bits(hist, n, lanes),
         (hist > 0).sum(axis=-1).astype(jnp.float64),
     ], axis=1)
-    return mat, W, tuple(extras)
+    return mat, W, hist, tuple(extras)
 
 
 def score_candidates_stacked(candidates, Xs, spec: FloatSpec, extrema,
@@ -540,18 +571,21 @@ def score_candidates_stacked(candidates, Xs, spec: FloatSpec, extrema,
     pending = [e[1] for e in entries if e[0] == "generic"]
     handles = [s._dev for s in pending]
     if plan:
-        out, W, extras = _grid_score(Xs, int(extrema[0]), tuple(dyn),
-                                     spec=spec, plan=tuple(plan))
+        out, W, hist, extras = _grid_score(Xs, int(extrema[0]), tuple(dyn),
+                                           spec=spec, plan=tuple(plan))
         PHASE1.dispatches += 1
     else:
-        out, W, extras = np.zeros((0, 6), np.float64), None, ()
+        out, W, hist, extras = np.zeros((0, 6), np.float64), None, None, ()
     if plan or handles:
         # ONE device_get resolves the score lanes, the retained word grid +
-        # metadata extras (finalist reuse), and every generic handle
-        mat, W_np, extras_np, vals = jax.device_get((out, W, extras, handles))
+        # byte histograms + metadata extras (finalist reuse), and every
+        # generic handle
+        mat, W_np, hist_np, extras_np, vals = jax.device_get(
+            (out, W, hist, extras, handles)
+        )
         PHASE1.device_gets += 1
     else:
-        mat, W_np, extras_np, vals = out, None, (), []
+        mat, W_np, hist_np, extras_np, vals = out, None, None, (), []
     mat = np.asarray(mat, np.float64)
     scores: list[CandidateScore] = []
     ri = gi = 0
@@ -568,6 +602,7 @@ def score_candidates_stacked(candidates, Xs, spec: FloatSpec, extrema,
                 table_syms=int(row[5]),
                 words=W_np[ri],
                 meta_streams=extras_np[ri],
+                byte_hist=hist_np[ri],
             ))
             ri += 1
         else:

@@ -33,9 +33,14 @@ from ..core.float_bits import F32
 # 1. host-side bucket codec
 # ---------------------------------------------------------------------------
 
-def compress_bucket(x: np.ndarray, method: str = "auto"):
+def compress_bucket(x: np.ndarray, method: str = "auto",
+                    backend: str | None = None):
+    """``backend="rans"`` routes the winner through the fused device encode
+    (one dispatch, one device_get — core/pipeline PHASE2) and the Encoded
+    carries the precompressed frame for the serializer."""
     return codec.encode(
-        np.asarray(x, np.float32), method=method, spec=F32, presample=8192
+        np.asarray(x, np.float32), method=method, spec=F32, presample=8192,
+        backend=backend,
     )
 
 
@@ -112,11 +117,13 @@ def bucket_from_wire(blob, parallel: bool | str = "auto",
     return retry_call(decode, policy=retry, label="bucket_from_wire")
 
 
-def bucket_report(x: np.ndarray) -> dict:
+def bucket_report(x: np.ndarray, backend: str = "zlib") -> dict:
     from ..container import dumps
 
-    enc = compress_bucket(x)
-    blob = dumps(enc)  # full self-describing container, wire-safe (no pickle)
+    enc = compress_bucket(x, backend=backend)
+    # full self-describing container, wire-safe (no pickle); a fused-encode
+    # payload rides through the serializer without host re-compression
+    blob = dumps(enc, backend=backend)
     raw = np.asarray(x, np.float32).nbytes
     return {
         "method": enc.method,

@@ -1,12 +1,20 @@
 """Platform dispatch for the rANS entropy-coder backend.
 
-On CPU the whole coder runs through the numpy reference (``ref.py``) — the
-container decode pool calls these functions from worker threads, where the
-lockstep-numpy loops beat dispatching interpret-mode device programs.  On
-TPU the data-parallel stages move on device: the encode symbol-statistics
-pass runs the Pallas histogram kernel and the decode lane loop runs the
-batched-jnp scan (``kernel.py``), both asserted byte-identical to the
-reference in ``tests/test_rans.py``.
+Small streams run through the numpy reference (``ref.py``); large streams
+route through the compiled lane scans (``kernel.py``) on every platform —
+on CPU the XLA-native ``lax.scan`` loops beat the vectorized numpy step
+loop by an order of magnitude, on TPU they are the device-resident path.
+Both producers emit byte-identical frames (asserted in
+``tests/test_rans.py``): the scans record dense per-step emissions and
+``ref.assemble_frame`` is the single bitstream assembly point.
+
+Two carve-outs keep the scan routing honest:
+
+* container decode-pool worker threads stay on the numpy reference — the
+  pool's parallelism comes from numpy releasing the GIL, while jit
+  dispatch would serialize the workers;
+* step counts are padded to :func:`kernel.bucket_steps` buckets (exact
+  no-op steps) so the scans compile O(log) programs, not one per length.
 
 ``REPRO_RANS_LANES`` overrides the encode-side interleave width (decode
 always honours the lane count stored in the frame).
@@ -23,6 +31,10 @@ from .ref import RansError  # noqa: F401  (re-exported for callers)
 
 _ON_TPU = not INTERPRET_DEFAULT
 
+# route through the compiled scans only when the scan is long enough to
+# amortize dispatch + possible compile (one bucket's worth of steps)
+SCAN_MIN_STEPS = 512
+
 
 def default_lanes() -> int:
     """Encode-side interleave width (``REPRO_RANS_LANES`` env override)."""
@@ -30,25 +42,64 @@ def default_lanes() -> int:
     return int(v) if v else ref.DEFAULT_LANES
 
 
+def _use_scan(steps: int) -> bool:
+    if steps < SCAN_MIN_STEPS:
+        return False
+    if _ON_TPU:
+        return True
+    from ...container.io import in_decode_pool
+
+    return not in_decode_pool()
+
+
 def compress(data: bytes, lanes: int | None = None,
              counts=None) -> bytes:
     """bytes -> framed rANS stream.
 
     ``counts`` feeds a precomputed byte histogram into the frequency pass
-    (e.g. phase-1's scoregrid histogram); otherwise the statistics pass
-    runs on device on TPU and as ``np.bincount`` on CPU."""
+    (e.g. phase-1's scoregrid histogram or the fused encode dispatch);
+    otherwise the statistics pass runs on device on TPU and as
+    ``np.bincount`` on CPU."""
     arr = np.frombuffer(data, np.uint8)
-    if counts is None and _ON_TPU and arr.size:
+    n = arr.size
+    lanes = ref.clamp_lanes(lanes or default_lanes(), n)
+    steps = -(-n // lanes) if n else 0
+    if n and _use_scan(steps):
+        return _compress_scan(arr, lanes, counts)
+    if counts is None and _ON_TPU and n:
         from .kernel import byte_hist
 
         counts = np.asarray(byte_hist(arr, use_pallas=True,
                                       interpret=INTERPRET_DEFAULT), np.int64)
-    return ref.encode(arr, lanes=lanes or default_lanes(), counts=counts)
+    return ref.encode(arr, lanes=lanes, counts=counts)
+
+
+def _compress_scan(arr: np.ndarray, lanes: int, counts) -> bytes:
+    """Encode through the compiled lane scan (byte-identical to ref)."""
+    from .kernel import bucket_steps, encode_scan
+
+    n = arr.size
+    if counts is None:
+        counts = np.bincount(arr, minlength=256)
+    freq = ref.quantize_freqs(np.asarray(counts, np.int64))
+    cum = ref.cum_from_freq(freq)
+    steps = bucket_steps(-(-n // lanes))
+    sym = np.zeros(steps * lanes, np.int32)
+    sym[:n] = arr
+    b0, b1, e0, e1, x = map(np.asarray, encode_scan(
+        sym.reshape(steps, lanes), n, freq.astype(np.int32),
+        cum.astype(np.int32), steps=steps, lanes=lanes,
+    ))
+    head = ref._HEADER.pack(ref.FRAME_VERSION, lanes, n)
+    return ref.assemble_frame(head, freq, x, b0, b1, e0, e1)
 
 
 def decompress(buf: bytes) -> bytes:
-    """Framed rANS stream -> bytes (device lane loop on TPU, ref on CPU)."""
-    if _ON_TPU:
+    """Framed rANS stream -> bytes (compiled lane loop for large frames,
+    numpy reference for small frames and decode-pool workers)."""
+    n = ref.peek_raw_len(bytes(buf))
+    lanes = max(bytes(buf)[1], 1)
+    if n and _use_scan(-(-n // lanes)):
         return decompress_device(buf)
     return ref.decode(buf).tobytes()
 
@@ -56,12 +107,18 @@ def decompress(buf: bytes) -> bytes:
 def decompress_device(buf: bytes, interpret: bool | None = None) -> bytes:
     """Decode with the device lane loop: host framing parse, one
     ``decode_scan`` program for the payload, host termination checks."""
-    from .kernel import decode_scan
+    from .kernel import bucket_steps, decode_scan
 
     lanes, n, freq, cum, states, bodies, body_lens = ref.parse_frame(bytes(buf))
     if n == 0:
         return b""
-    steps = -(-n // lanes)
+    steps = bucket_steps(-(-n // lanes), 1)
+    # bucket the body width too: decode_scan recompiles per body shape
+    maxw = bucket_steps(bodies.shape[1], 64)
+    if maxw != bodies.shape[1]:
+        bodies = np.ascontiguousarray(
+            np.pad(bodies, ((0, 0), (0, maxw - bodies.shape[1])))
+        )
     syms, x, ptr = decode_scan(
         states, bodies, body_lens, n,
         np.repeat(np.arange(256, dtype=np.int32), freq), freq, cum,
@@ -92,6 +149,6 @@ def decompress_into(buf: bytes, out) -> int:
     claimed = ref.peek_raw_len(bytes(buf))
     if claimed != len(mv):
         return claimed          # mismatch: caller raises, nothing decoded
-    data = ref.decode(bytes(buf))
+    data = np.frombuffer(decompress(bytes(buf)), np.uint8)
     np.frombuffer(mv, np.uint8)[:] = data
     return int(data.size)

@@ -88,10 +88,13 @@ def quantize_freqs(counts: np.ndarray) -> np.ndarray:
     return freq
 
 
-def _cum_from_freq(freq: np.ndarray) -> np.ndarray:
+def cum_from_freq(freq: np.ndarray) -> np.ndarray:
     cum = np.zeros(256, np.int64)
     np.cumsum(freq[:-1], out=cum[1:])
     return cum
+
+
+_cum_from_freq = cum_from_freq     # private alias kept for older callers
 
 
 def _pack_table(freq: np.ndarray) -> bytes:
@@ -148,12 +151,57 @@ def clamp_lanes(lanes: int, n: int) -> int:
     return max(1, min(int(lanes), 255, max(int(n), 1)))
 
 
+def assemble_frame(head: bytes, freq: np.ndarray, x_final: np.ndarray,
+                   b0: np.ndarray, b1: np.ndarray,
+                   e0: np.ndarray, e1: np.ndarray) -> bytes:
+    """Dense per-step emission buffers -> framed rANS bytes.
+
+    ``b0``/``b1`` hold the first/second renorm byte each lane emitted at
+    each step, ``e0``/``e1`` whether that emission actually happened; all
+    four are ``[steps, lanes]`` in ASCENDING step order.  Shared by the
+    vectorized host encoder and the device ``encode_scan`` path, so both
+    producers assemble bitstreams through exactly one code path.
+
+    A lane's body stores bytes in decode order = the reverse of emission
+    order: ascending step, and within a step the second emission before the
+    first."""
+    steps, lanes = b0.shape
+    # lane-major interleave [lanes, steps*2]: per step (b1, b0)
+    inter = np.empty((lanes, 2 * steps), np.uint8)
+    inter[:, 0::2] = b1.T
+    inter[:, 1::2] = b0.T
+    keep = np.empty((lanes, 2 * steps), bool)
+    keep[:, 0::2] = e1.T
+    keep[:, 1::2] = e0.T
+    counts = keep.sum(axis=1, dtype=np.int64)
+    # flatnonzero+take compacts ~4x faster than boolean fancy indexing here
+    body = inter.reshape(-1)[np.flatnonzero(keep.reshape(-1))].tobytes()
+    bounds = np.zeros(lanes + 1, np.int64)
+    np.cumsum(counts, out=bounds[1:])
+    lens = (counts + 4).astype("<u4").tobytes()
+    states = np.ascontiguousarray(np.asarray(x_final, np.uint32), "<u4")
+    flushes = states.tobytes()
+    parts = [head, _pack_table(freq), lens]
+    for j in range(lanes):
+        parts.append(flushes[4 * j : 4 * j + 4])
+        parts.append(body[bounds[j] : bounds[j + 1]])
+    return b"".join(parts)
+
+
 def encode(data, lanes: int | None = None, counts=None) -> bytes:
     """uint8 stream -> framed rANS bytes.
 
     ``counts`` optionally supplies the byte histogram (int[256]) so a
     histogram already computed elsewhere — the device statistics pass, or
-    phase-1's scoregrid — feeds the frequency table with no second scan."""
+    phase-1's scoregrid — feeds the frequency table with no second scan.
+
+    The step loop is fully dense: every lane records both potential renorm
+    bytes per step into ``[steps, lanes]`` emission buffers (mask flags say
+    which actually fired) and :func:`assemble_frame` compacts them into
+    per-lane bodies in one vectorized pass — no per-step fancy-indexed
+    writes.  Pad lanes in the tail step carry frequency
+    :data:`PROB_SCALE`, which can never trigger a renorm (``x_max`` =
+    2^31 > any state), so the loop body needs no activity mask."""
     if isinstance(data, (bytes, bytearray, memoryview)):
         data = np.frombuffer(bytes(data), np.uint8)
     data = np.ascontiguousarray(np.asarray(data, np.uint8))
@@ -176,38 +224,30 @@ def encode(data, lanes: int | None = None, counts=None) -> bytes:
 
     fr = freq[sym]                                  # [steps, lanes] gathers
     cm = cum[sym]
-    fr[steps - 1, ~tail_active] = 1                 # pad lanes: avoid 0-div
+    fr[steps - 1, ~tail_active] = PROB_SCALE        # pad lanes: renorm-proof
 
     x = np.full(lanes, RANS_L, np.int64)
-    buf = np.zeros((lanes, MAX_RENORM * steps), np.uint8)   # emission order
-    ptr = np.zeros(lanes, np.int64)
-    lane_idx = np.arange(lanes)
+    b0 = np.zeros((steps, lanes), np.uint8)         # dense emission buffers
+    b1 = np.zeros((steps, lanes), np.uint8)
+    e0 = np.zeros((steps, lanes), bool)
+    e1 = np.zeros((steps, lanes), bool)
     renorm_shift = RANS_L >> PROB_BITS << 8         # x_max = this * freq
     for t in range(steps - 1, -1, -1):              # symbols in reverse order
         f = fr[t]
-        act = tail_active if t == steps - 1 else None
         x_max = renorm_shift * f
-        for _ in range(MAX_RENORM):
-            m = x >= x_max
-            if act is not None:
-                m &= act
-            if not m.any():
-                break
-            buf[lane_idx[m], ptr[m]] = (x[m] & 0xFF).astype(np.uint8)
-            ptr[m] += 1
-            x[m] >>= 8
+        m0 = x >= x_max
+        b0[t] = x.astype(np.uint8)                  # low byte, masked by e0
+        x = np.where(m0, x >> 8, x)
+        m1 = x >= x_max
+        b1[t] = x.astype(np.uint8)
+        x = np.where(m1, x >> 8, x)
+        e0[t] = m0
+        e1[t] = m1
         q, r = np.divmod(x, f)
         pushed = (q << PROB_BITS) + r + cm[t]
-        x = np.where(tail_active, pushed, x) if act is not None else pushed
+        x = np.where(tail_active, pushed, x) if t == steps - 1 else pushed
 
-    # lane stream = 4-byte LE state flush, then body bytes in decode order
-    # (the reverse of emission order)
-    streams = [
-        struct.pack("<I", int(x[j])) + buf[j, : ptr[j]][::-1].tobytes()
-        for j in range(lanes)
-    ]
-    lens = b"".join(struct.pack("<I", len(s)) for s in streams)
-    return b"".join([head, _pack_table(freq), lens, *streams])
+    return assemble_frame(head, freq, x, b0, b1, e0, e1)
 
 
 # ---------------------------------------------------------------------------
@@ -297,7 +337,11 @@ def check_final(x: np.ndarray, ptr: np.ndarray, body_lens: np.ndarray) -> None:
 
 
 def decode(buf: bytes) -> np.ndarray:
-    """Framed rANS bytes -> uint8[n] payload (host lockstep-lane loop)."""
+    """Framed rANS bytes -> uint8[n] payload (host lockstep-lane loop).
+
+    The lane loop is dense: every step pops all lanes unconditionally and
+    renormalizes with clamped ``take_along_axis`` gathers (no fancy-indexed
+    writes); only the final partial step needs an activity mask."""
     lanes, n, freq, cum, states, bodies, body_lens = parse_frame(bytes(buf))
     if n == 0:
         return np.zeros(0, np.uint8)
@@ -308,17 +352,28 @@ def decode(buf: bytes) -> np.ndarray:
     out = np.zeros((steps, lanes), np.uint8)
     lane_idx = np.arange(lanes)
     mask_slot = np.int64(PROB_SCALE - 1)
+    maxw = bodies.shape[1]
+    tail_active = (steps - 1) * lanes + lane_idx < n
     for t in range(steps):
-        act = (t * lanes + lane_idx) < n
+        full = t < steps - 1
+        act = None if full else tail_active
         slot = x & mask_slot
         s = slot2sym[slot]
-        out[t, act] = s[act]
-        x = np.where(act, freq[s] * (x >> PROB_BITS) + slot - cum[s], x)
+        popped = freq[s] * (x >> PROB_BITS) + slot - cum[s]
+        if full:
+            out[t] = s
+            x = popped
+        else:
+            out[t, act] = s[act]
+            x = np.where(act, popped, x)
         for _ in range(MAX_RENORM):
-            m = act & (x < RANS_L) & (ptr < body_lens)
-            if not m.any():
-                break
-            x[m] = (x[m] << 8) | bodies[lane_idx[m], ptr[m]]
-            ptr[m] += 1
+            m = (x < RANS_L) & (ptr < body_lens)
+            if not full:
+                m &= act
+            b = np.take_along_axis(
+                bodies, np.minimum(ptr, maxw - 1)[:, None], axis=1
+            )[:, 0]
+            x = np.where(m, (x << 8) | b, x)
+            ptr += m
     check_final(x, ptr, body_lens)
     return out.reshape(-1)[:n]

@@ -337,3 +337,101 @@ def test_rans_estimate_tracks_real_size():
         )
         real = len(rans_ops.compress(payload))
         assert 0.7 * real <= est <= 1.3 * real, (est, real)
+
+
+# ---------------------------------------------------------------------------
+# encode lane scan: ref <-> kernel byte parity (PR 7)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(STREAMS))
+@pytest.mark.parametrize("lanes", LANE_COUNTS)
+def test_encode_scan_byte_identical_to_ref(name, lanes):
+    """The reversed encode lane scan and the numpy reference are the SAME
+    producer: every emitted byte, state flush and table word identical."""
+    data = STREAMS[name]
+    if not data:
+        pytest.skip("empty stream never reaches the scan (header-only frame)")
+    arr = np.frombuffer(data, np.uint8)
+    lanes_c = ref.clamp_lanes(lanes, arr.size)
+    assert rans_ops._compress_scan(arr, lanes_c, None) == ref.encode(
+        arr, lanes=lanes_c
+    )
+
+
+def test_encode_scan_lane_sweep_1_to_255():
+    arr = np.frombuffer(STREAMS["skewed"][:8192], np.uint8)
+    for lanes in (1, 2, 3, 5, 7, 8, 9, 16, 31, 33, 63, 64, 65, 100, 127,
+                  128, 200, 254, 255):
+        assert rans_ops._compress_scan(arr, lanes, None) == ref.encode(
+            arr, lanes=lanes
+        ), f"lanes={lanes}"
+
+
+def test_encode_scan_all_one_symbol_max_freq():
+    """f = PROB_SCALE exercises the int32-safe renorm compare: the naive
+    bound 2^19 * 4096 is exactly 2^31 (overflow); the scan's shifted
+    compare must stay byte-identical to ref on this extreme."""
+    arr = np.full(70_001, 9, np.uint8)
+    for lanes in (1, 64, 255):
+        frame = rans_ops._compress_scan(arr, lanes, None)
+        assert frame == ref.encode(arr, lanes=lanes)
+        assert rans_ops.decompress(frame) == arr.tobytes()
+
+
+def test_encode_scan_roundtrip_fuzz():
+    rng = _rng(7)
+    for _ in range(8):
+        n = int(rng.integers(1, 50_000))
+        k = int(rng.integers(2, 40))
+        p = rng.dirichlet(np.full(k, 0.3))
+        arr = rng.choice(k, size=n, p=p).astype(np.uint8)
+        lanes = int(rng.integers(1, 256))
+        frame = rans_ops._compress_scan(arr, lanes, None)
+        assert frame == ref.encode(arr, lanes=lanes), (n, lanes)
+        assert rans_ops.decompress(frame) == arr.tobytes()
+
+
+def test_compress_edge_cases_route_and_roundtrip():
+    """ops.compress on empty / 1-byte / all-one-symbol streams: whatever
+    producer it routes to, frames equal the reference and round-trip."""
+    for data in (b"", b"\x42", b"\x07" * 4099, b"\x07" * 70_000):
+        assert rans_ops.compress(data) == ref.encode(
+            np.frombuffer(data, np.uint8)
+        )
+        assert rans_ops.decompress(rans_ops.compress(data)) == data
+
+
+def test_quantize_freqs_dev_matches_ref():
+    from repro.kernels.rans.kernel import quantize_freqs_dev
+
+    rng = _rng(11)
+    cases = []
+    for _ in range(25):
+        counts = np.zeros(256, np.int64)
+        k = int(rng.integers(1, 257))
+        idx = rng.choice(256, k, replace=False)
+        counts[idx] = rng.integers(1, 10 ** 6, k)
+        cases.append(counts)
+    one = np.zeros(256, np.int64)
+    one[7] = 12345
+    skew = np.ones(256, np.int64)
+    skew[0] = 10 ** 9
+    cases += [one, skew]
+    for counts in cases:
+        assert np.array_equal(
+            np.asarray(quantize_freqs_dev(counts)), ref.quantize_freqs(counts)
+        )
+
+
+def test_bucket_steps_bounds():
+    from repro.kernels.rans.kernel import bucket_steps
+
+    assert bucket_steps(1) == 512
+    assert bucket_steps(512) == 512
+    buckets = set()
+    for s in range(1, 1 << 16, 97):
+        b = bucket_steps(s)
+        assert b >= s
+        assert b <= max(512, s + (s // 4) + 1)   # <= 25% padding waste
+        buckets.add(b)
+    assert len(buckets) < 40                      # O(log) distinct programs
