@@ -416,6 +416,8 @@ def run(rows: list, smoke: bool = False):
     """smoke=True: 10k-element CI-sized pass over the codec path only
     (skips model checkpoint / gradient-bucket benches); results go to
     BENCH_codec.smoke.json so the tracked 100k baseline stays intact."""
+    from . import bench_step
+
     if smoke:
         bench_transforms(rows, n_elems=10_000)
         bench_container(rows, n_elems=10_000)
@@ -423,6 +425,7 @@ def run(rows: list, smoke: bool = False):
         bench_rans(rows, n_elems=10_000)
         bench_gd(rows)
         bench_kernels(rows)
+        bench_step.run(rows, smoke=True)
     else:
         bench_transforms(rows)
         bench_container(rows)
@@ -432,4 +435,5 @@ def run(rows: list, smoke: bool = False):
         bench_kernels(rows)
         bench_checkpoint(rows)
         bench_grad_compress(rows)
+        bench_step.run(rows)
     _dump_json(smoke)

@@ -1,1 +1,6 @@
-from .manager import CheckpointManager, restore_tree, save_tree  # noqa: F401
+from .manager import (  # noqa: F401
+    CheckpointManager,
+    load_plans,
+    restore_tree,
+    save_tree,
+)

@@ -34,6 +34,7 @@ import numpy as np
 from ..container import ContainerError, ContainerReader, ContainerWriter
 from ..container.format import dtype_name as _dtype_name, resolve_dtype
 from ..container.io import in_decode_pool, shared_decode_pool
+from ..core import plans as plans_mod
 from ..reliability import durable as _durable
 
 log = logging.getLogger("repro.reliability")
@@ -121,8 +122,16 @@ def _build_tree(spec: dict, leaves_it):
 # ---------------------------------------------------------------------------
 
 def save_tree(tree, directory: str | Path, extra: dict | None = None,
-              method: str = "auto") -> dict:
-    """Atomically write a pytree; returns compression stats."""
+              method: str = "auto", plans=None) -> dict:
+    """Atomically write a pytree; returns compression stats.
+
+    ``plans`` persists the training loop's encode plans alongside the tree
+    (same two-phase commit) as ``plans.json``: either a
+    :class:`~repro.distributed.steps.CompressedStepState` (its full state —
+    plans + step counter) or a plain ``{name: EncodePlan}`` dict.  A warm
+    restart restores them via :func:`load_plans` /
+    ``CompressedStepState.from_json`` and skips phase-1 re-selection
+    entirely."""
     directory = Path(directory)
     tmp = directory.with_suffix(".tmp")
     if tmp.exists():
@@ -178,6 +187,11 @@ def save_tree(tree, directory: str | Path, extra: dict | None = None,
             "comp": sum(c["comp"] for c in chunks),
             "methods": [c["method"] for c in chunks],
         })
+    if plans is not None:
+        bundle = (plans.to_json() if hasattr(plans, "to_json")
+                  else plans_mod.plans_to_json(dict(plans)))
+        _durable.write_bytes(tmp / "plans.json",
+                             json.dumps(bundle).encode("utf-8"))
     manifest = {
         "format": MANIFEST_FORMAT,
         "tree": tree_spec,
@@ -257,6 +271,19 @@ def restore_tree(directory: str | Path, parallel: bool = True):
     return tree, manifest["extra"]
 
 
+def load_plans(directory: str | Path) -> dict | None:
+    """Raw encode-plan bundle saved next to a checkpoint, or ``None``.
+
+    Feed the result to :func:`repro.core.plans.plans_from_json` for a plain
+    ``{name: EncodePlan}`` dict, or to
+    ``CompressedStepState.from_json`` to resume the full compressed-step
+    state (plans + step counter) on a warm restart."""
+    p = Path(directory) / "plans.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
 class CheckpointManager:
     """step-numbered checkpoints with retention + latest-step discovery."""
 
@@ -266,12 +293,22 @@ class CheckpointManager:
         self.keep = keep
         self.method = method
 
-    def save(self, step: int, tree, extra: dict | None = None) -> dict:
+    def save(self, step: int, tree, extra: dict | None = None,
+             plans=None) -> dict:
         extra = dict(extra or {})
         extra["step"] = step
-        stats = save_tree(tree, self.root / f"step_{step:08d}", extra, self.method)
+        stats = save_tree(tree, self.root / f"step_{step:08d}", extra,
+                          self.method, plans=plans)
         self._gc()
         return stats
+
+    def restore_plans(self) -> dict | None:
+        """Encode-plan bundle of the newest committed step (see
+        :func:`load_plans`); ``None`` when no step has one."""
+        s = self.latest_step()
+        if s is None:
+            return None
+        return load_plans(self.root / f"step_{s:08d}")
 
     def _steps(self) -> list[int]:
         """Committed step numbers only — `.tmp` staging dirs (including

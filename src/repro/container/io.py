@@ -22,6 +22,7 @@ caller.  Semantics: docs/format.md §Parallel reads.
 """
 from __future__ import annotations
 
+import dataclasses
 import io as _io
 import os
 import struct
@@ -114,7 +115,14 @@ class ContainerWriter:
         probe_threshold: int = PROBE_THRESHOLD,
         fallback_identity: bool = True,
         durable: bool = True,
+        plan=None,
     ):
+        """``plan`` (a :class:`repro.core.plans.EncodePlan`) pre-empts the
+        selection probe entirely: every chunk encodes phase-2-only through
+        :func:`repro.core.pipeline.encode_with_plan` (winner, then the
+        plan's ranked fallbacks, then identity — always verified).  The
+        plan's spec must match the container dtype; its backend hint is
+        rebased onto this writer's backend."""
         self._dtype_name = F.dtype_name(dtype)
         self._dtype = F.resolve_dtype(self._dtype_name)
         self._spec = _FLOAT_SPECS.get(self._dtype_name)
@@ -129,6 +137,21 @@ class ContainerWriter:
         self._probe_elems = probe_elems
         self._probe_threshold = probe_threshold
         self._fallback_identity = fallback_identity
+        self._plan = None
+        if plan is not None:
+            if self._spec is None:
+                raise ContainerError(
+                    f"container dtype {self._dtype_name!r} takes the raw "
+                    "byte path; a float encode plan does not apply"
+                )
+            if plan.spec_name != self._spec_name:
+                raise ContainerError(
+                    f"encode plan spec {plan.spec_name!r} does not match "
+                    f"container spec {self._spec_name!r}"
+                )
+            if plan.backend != self._backend.name:
+                plan = dataclasses.replace(plan, backend=self._backend.name)
+            self._plan = plan
         self._picked: tuple[str, dict | None] | None = None
         self._entries: list[dict] = []
         self._chunks: list[dict] = []
@@ -180,6 +203,11 @@ class ContainerWriter:
 
     def _encode(self, flat: np.ndarray) -> pipeline.Encoded:
         name, prm = self._method, self._params
+        if self._plan is not None and name == "auto":
+            # pre-built plan: pure phase-2 encode — no probe, no phase-1
+            # dispatches; a chunk the winner rejects walks the plan's own
+            # ranked fallbacks and terminally lands on identity (verified)
+            return pipeline.encode_with_plan(flat, self._plan)
         if name == "auto":
             if self._picked is None and flat.size > self._probe_threshold:
                 # ceil-strided so the probe spans the whole chunk (same

@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import plans
 from . import scoring as S
 from . import transforms as T
 from .float_bits import (
@@ -376,18 +377,20 @@ def _fused_encode(prep: "_Prepared", name: str, p: dict) -> Encoded | None:
 
 
 # ---------------------------------------------------------------------------
-# selection plan cache (§Perf PR 7): streaming writers and repeated small-
-# chunk encodes re-run full phase-1 selection on identical content (probe
-# samples, re-encoded chunks).  The ranked candidate list is cached by a
-# digest of the exact strided sample plus every knob that shapes the plan;
-# a hit skips phase 1 entirely.  Correctness is unaffected: whatever plan
-# comes out, phase 2 still apply+verifies every shipped chunk.  Direct
-# `select_method` calls stay uncached unless the caller opts in, so the
-# PHASE1 counter contracts (tests + CI `_counts`) keep their exact meaning.
+# selection plan cache (§Perf PR 7, hardened PR 8): streaming writers and
+# repeated small-chunk encodes re-run full phase-1 selection on identical
+# content (probe samples, re-encoded chunks).  The ranked candidate list is
+# cached by a digest of the exact strided sample plus every knob that shapes
+# the plan; a hit skips phase 1 entirely.  Correctness is unaffected:
+# whatever plan comes out, phase 2 still apply+verifies every shipped chunk.
+# Direct `select_method` calls stay uncached unless the caller opts in, so
+# the PHASE1 counter contracts (tests + CI `_counts`) keep their exact
+# meaning.  The store itself is a locked LRU (`core.plans.PlanStore`): a hit
+# refreshes recency — a hot key survives any number of cold inserts — and
+# concurrent encoders (threaded checkpoint save/restore) mutate it safely.
 # ---------------------------------------------------------------------------
 
-_PLAN_CACHE: dict = {}
-_PLAN_CACHE_MAX = 128
+_PLAN_CACHE = plans.PlanStore(max_items=128)
 
 
 def _freeze_candidates(candidates) -> tuple:
@@ -402,12 +405,6 @@ def _plan_key(xf, n: int, spec_name: str, candidates, sample_elems, top_k,
     ).digest()
     return (digest, n, spec_name, _freeze_candidates(candidates),
             sample_elems, top_k, engine or default_engine(), backend)
-
-
-def _plan_store(key, ranked) -> None:
-    if len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:
-        _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))
-    _PLAN_CACHE[key] = list(ranked)
 
 
 # ---------------------------------------------------------------------------
@@ -593,9 +590,76 @@ def select_method(
     if not ranked:
         raise T.TransformError("no feasible transform candidate")
     if key is not None:
-        _plan_store(key, ranked)
+        _PLAN_CACHE.put(key, list(ranked))
     name, p = ranked[0]
     return name, dict(p)
+
+
+def build_plan(
+    x,
+    candidates=DEFAULT_CANDIDATES,
+    spec: FloatSpec | None = None,
+    sample_elems: int = DEFAULT_SAMPLE_ELEMS,
+    top_k: int = DEFAULT_TOP_K,
+    engine: str | None = None,
+    backend: str | None = None,
+    step: int = 0,
+) -> plans.EncodePlan:
+    """Run phase-1 selection once and return the result as a first-class
+    :class:`~repro.core.plans.EncodePlan`: winner + params + backend + the
+    full ranked fallback order + a stream-statistics fingerprint of ``x``.
+
+    The plan is the amortization artifact of the always-on compressed
+    training step: callers hold it per bucket/leaf, re-encode every step
+    through :func:`encode_with_plan` (phase 2 only), and rebuild it only
+    when the fingerprint drifts or a refresh interval elapses
+    (``distributed.steps.CompressedStepState`` implements that policy)."""
+    xf = np.asarray(x).reshape(-1)
+    fp = plans.StreamFingerprint.from_array(xf)
+    prep = _prepare(x, spec)
+    if prep.n_active == 0:
+        ranked = [("identity", {})]
+    else:
+        ranked, _ = _rank_candidates(prep, candidates, None, sample_elems,
+                                     top_k, engine, backend)
+        if not ranked:
+            raise T.TransformError("no feasible transform candidate")
+    name, p = ranked[0]
+    return plans.EncodePlan(
+        method=name, params=dict(p), spec_name=prep.spec.name,
+        backend=backend, fingerprint=fp,
+        ranked=[(n_, dict(p_)) for n_, p_ in ranked], step=step,
+    )
+
+
+def encode_with_plan(
+    x,
+    plan: plans.EncodePlan,
+    chunk_elems: int = DEFAULT_CHUNK_ELEMS,
+) -> Encoded:
+    """Phase-2-only encode under a pre-built plan: apply the plan's winner
+    (falling back down the plan's ranked order, then identity) with full
+    chunked round-trip verification.  Selection is skipped entirely; the
+    verify contract is not — a stale plan whose winner no longer
+    round-trips on this data is *rejected, never shipped*, and the encode
+    degrades to the next-ranked candidate (ultimately identity).  A stale
+    plan can therefore cost compression ratio, never correctness."""
+    spec = SPECS[plan.spec_name]
+    order = [(n_, dict(p_)) for n_, p_ in plan.ranked]
+    if not order or order[0][0] != plan.method or order[0][1] != dict(plan.params):
+        order.insert(0, (plan.method, dict(plan.params)))
+    for name, p in order:
+        if name == "identity":
+            break
+        try:
+            return apply_transform(x, name, p, spec=spec,
+                                   chunk_elems=chunk_elems,
+                                   backend=plan.backend)
+        except T.TransformError:
+            continue
+    # identity is the terminal fallback whether or not the plan listed it:
+    # it always round-trips, so a plan-reuse encode can never fail
+    return apply_transform(x, "identity", spec=spec, backend=plan.backend)
 
 
 def _rank_candidates(prep: _Prepared, candidates, size_fn, sample_elems,
@@ -753,7 +817,7 @@ def _encode_full(
             prep, candidates, size_fn, sample_elems, top_k, engine, backend
         )
         if key is not None:
-            _plan_store(key, ranked)
+            _PLAN_CACHE.put(key, list(ranked))
 
     # phase 2: apply + verify finalists in rank order (fused device encode
     # for rans-backend callers; classic host path otherwise)

@@ -1,0 +1,281 @@
+"""First-class, serializable encode plans — selection amortized across steps.
+
+The paper's transforms only pay off inside a training loop when phase-1
+selection is not re-run per bucket per step.  This module promotes the
+output of :func:`repro.core.pipeline.select_method` into an
+:class:`EncodePlan` artifact (winner + params + backend + a cheap
+stream-statistics fingerprint + the full ranked fallback order) that is
+
+* **reusable** — ``pipeline.encode_with_plan`` applies it directly, skipping
+  phase 1 entirely; phase-2 apply+verify still runs on every shipped chunk,
+  so a stale plan can degrade ratio but never correctness;
+* **drift-tracked** — :class:`StreamFingerprint` captures strided-sample
+  moments/extrema (not a content digest: two noise draws from the same
+  gradient distribution fingerprint as *equal enough*), and
+  :meth:`StreamFingerprint.drift` quantifies distribution shift so callers
+  re-select only when the stream actually changed;
+* **serializable** — plain-JSON ``to_json``/``from_json`` so plans persist
+  in checkpoints (warm restarts skip re-selection) and travel between
+  processes without pickle.
+
+:class:`PlanStore` is the shared cache primitive: a **locked LRU** keyed by
+anything hashable (bucket/leaf names, content digests).  A ``get`` refreshes
+recency — a hot key survives arbitrarily many cold inserts — and every
+mutation holds the lock, so threaded checkpoint save/restore and concurrent
+encodes can share one store (the PR 6 stress tests run against exactly
+that).
+
+Knobs (read at call time):
+
+* ``REPRO_PLAN_REFRESH_STEPS`` — full re-selection at least every N steps
+  even without drift (default 64; ``0`` disables interval refresh).
+* ``REPRO_PLAN_DRIFT`` — fingerprint drift threshold above which a plan is
+  re-selected (default 0.25, in units of the tracked stream's own scale).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+from collections import OrderedDict
+
+import numpy as np
+
+DEFAULT_REFRESH_STEPS = 64
+DEFAULT_DRIFT_THRESHOLD = 0.25
+# fingerprint sample size: strided moments/extrema over this many elements.
+# Deliberately smaller than the selection sample (4096): the fingerprint
+# runs EVERY step on EVERY bucket, selection only on cold/drifted plans.
+FINGERPRINT_ELEMS = 1024
+
+PLAN_FORMAT = 1
+
+
+def plan_refresh_steps() -> int:
+    return int(os.environ.get("REPRO_PLAN_REFRESH_STEPS",
+                              DEFAULT_REFRESH_STEPS))
+
+
+def plan_drift_threshold() -> float:
+    return float(os.environ.get("REPRO_PLAN_DRIFT", DEFAULT_DRIFT_THRESHOLD))
+
+
+def _strided_sample(flat: np.ndarray, limit: int) -> np.ndarray:
+    if flat.shape[0] <= limit:
+        return flat
+    step = -(-flat.shape[0] // limit)  # ceil: sample spans the whole array
+    return flat[::step][:limit]
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamFingerprint:
+    """Cheap stream-statistics fingerprint: strided-sample moments/extrema.
+
+    NOT a content digest — two same-distribution noise draws produce nearly
+    identical fingerprints (drift ~ sampling error), which is the point:
+    the fingerprint answers "is this still the stream the plan was selected
+    for", not "are these the same bytes"."""
+
+    n: int              # full stream length (elements)
+    n_finite: int       # finite+nonzero sample elements the moments cover
+    mean: float
+    std: float
+    lo: float
+    hi: float
+    sample_elems: int = FINGERPRINT_ELEMS
+
+    @classmethod
+    def from_array(cls, x, sample_elems: int = FINGERPRINT_ELEMS
+                   ) -> "StreamFingerprint":
+        flat = np.asarray(x).reshape(-1)
+        s = _strided_sample(flat, sample_elems).astype(np.float64, copy=False)
+        finite = s[np.isfinite(s) & (s != 0)]
+        if finite.size == 0:
+            return cls(n=int(flat.shape[0]), n_finite=0, mean=0.0, std=0.0,
+                       lo=0.0, hi=0.0, sample_elems=sample_elems)
+        return cls(
+            n=int(flat.shape[0]),
+            n_finite=int(finite.size),
+            mean=float(finite.mean()),
+            std=float(finite.std()),
+            lo=float(finite.min()),
+            hi=float(finite.max()),
+            sample_elems=sample_elems,
+        )
+
+    def drift(self, other: "StreamFingerprint") -> float:
+        """Distribution distance from ``self`` (the plan's stream) to
+        ``other`` (the stream now), in units of self's own scale: 0.0 for
+        identical statistics, ~sampling noise for fresh draws of the same
+        distribution, >> 1 for a genuine shift.  Symmetric enough for
+        thresholding; cheap by construction (pure scalar math)."""
+        if self.n_finite == 0 and other.n_finite == 0:
+            return 0.0
+        if (self.n_finite == 0) != (other.n_finite == 0):
+            return float("inf")
+        tiny = 1e-30
+        scale = max(self.std, 1e-12 * max(abs(self.mean), 1.0), tiny)
+        span = max(self.hi - self.lo, scale)
+        d = max(
+            abs(other.mean - self.mean) / scale,
+            abs(other.std - self.std) / scale,
+            max(self.lo - other.lo, 0.0) / span,
+            max(other.hi - self.hi, 0.0) / span,
+        )
+        # a length change alone (rebucketing) is a structural change worth
+        # re-selecting for, scaled so +-10% jitter stays under any sane
+        # threshold
+        if self.n:
+            d = max(d, abs(other.n - self.n) / self.n)
+        return float(d)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "StreamFingerprint":
+        return cls(**{f.name: obj[f.name] for f in dataclasses.fields(cls)})
+
+
+@dataclasses.dataclass
+class EncodePlan:
+    """The reusable product of phase-1 selection: everything a later encode
+    needs to skip selection, plus everything a later *caller* needs to
+    decide whether the plan still fits the stream."""
+
+    method: str                       # the winner
+    params: dict
+    spec_name: str                    # f64 | f32 | bf16
+    backend: str | None               # byte-stream compressor hint
+    fingerprint: StreamFingerprint    # statistics of the selected-on stream
+    ranked: list = dataclasses.field(default_factory=list)
+    # ^ full fallback order [(method, params), ...] including the winner:
+    #   phase 2 walks it when the winner rejects new data (stale plan)
+    step: int = 0                     # caller's step counter at selection
+
+    def to_json(self) -> dict:
+        return {
+            "format": PLAN_FORMAT,
+            "method": self.method,
+            "params": dict(self.params),
+            "spec_name": self.spec_name,
+            "backend": self.backend,
+            "fingerprint": self.fingerprint.to_json(),
+            "ranked": [[n, dict(p)] for n, p in self.ranked],
+            "step": int(self.step),
+        }
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "EncodePlan":
+        fmt = obj.get("format")
+        if fmt != PLAN_FORMAT:
+            raise ValueError(
+                f"unsupported encode-plan format {fmt!r} (this reader "
+                f"supports {PLAN_FORMAT})"
+            )
+        return cls(
+            method=obj["method"],
+            params=dict(obj["params"]),
+            spec_name=obj["spec_name"],
+            backend=obj["backend"],
+            fingerprint=StreamFingerprint.from_json(obj["fingerprint"]),
+            ranked=[(n, dict(p)) for n, p in obj["ranked"]],
+            step=int(obj.get("step", 0)),
+        )
+
+
+class PlanStore:
+    """Locked LRU store for selection plans (or any per-key plan artifact).
+
+    Fixes the two PR 7 ``_PLAN_CACHE`` defects in one primitive:
+
+    * eviction is **recency** order, not insertion order — ``get`` moves the
+      key to the MRU end, so a hot key survives any number of cold inserts
+      (regression-tested against 128+ inserts);
+    * every read-modify-write holds one lock, so concurrent encoders
+      (threaded checkpoint save/restore, parallel bucket compression) never
+      corrupt the dict or double-evict.
+
+    ``hits`` / ``misses`` / ``evictions`` are cumulative counters (callers
+    reset via :meth:`reset_stats`) — the step benchmarks gate hit rate from
+    them exactly.
+    """
+
+    def __init__(self, max_items: int = 128):
+        if max_items < 1:
+            raise ValueError(f"max_items must be >= 1, got {max_items}")
+        self.max_items = int(max_items)
+        self._d: OrderedDict = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key, default=None):
+        with self._lock:
+            if key in self._d:
+                self._d.move_to_end(key)  # hit refreshes recency
+                self.hits += 1
+                return self._d[key]
+            self.misses += 1
+            return default
+
+    def peek(self, key, default=None):
+        """Read without refreshing recency or counting a hit/miss."""
+        with self._lock:
+            return self._d.get(key, default)
+
+    def put(self, key, value) -> None:
+        with self._lock:
+            if key in self._d:
+                self._d.move_to_end(key)
+            self._d[key] = value
+            while len(self._d) > self.max_items:
+                self._d.popitem(last=False)  # LRU end
+                self.evictions += 1
+
+    def pop(self, key, default=None):
+        with self._lock:
+            return self._d.pop(key, default)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._d.clear()
+
+    def keys(self) -> list:
+        with self._lock:
+            return list(self._d.keys())
+
+    def items(self) -> list:
+        with self._lock:
+            return list(self._d.items())
+
+    def reset_stats(self) -> None:
+        with self._lock:
+            self.hits = self.misses = self.evictions = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._d)
+
+    def __contains__(self, key) -> bool:
+        with self._lock:
+            return key in self._d
+
+
+def plans_to_json(plans: dict) -> dict:
+    """{name: EncodePlan} -> plain-JSON dict (checkpoint persistence)."""
+    return {
+        "format": PLAN_FORMAT,
+        "plans": {str(k): p.to_json() for k, p in plans.items()},
+    }
+
+
+def plans_from_json(obj: dict) -> dict:
+    fmt = obj.get("format")
+    if fmt != PLAN_FORMAT:
+        raise ValueError(
+            f"unsupported encode-plan bundle format {fmt!r} (this reader "
+            f"supports {PLAN_FORMAT})"
+        )
+    return {k: EncodePlan.from_json(v) for k, v in obj.get("plans", {}).items()}

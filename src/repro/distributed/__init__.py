@@ -1,1 +1,10 @@
+from .compress import (  # noqa: F401
+    bucket_from_wire,
+    bucket_report,
+    bucket_to_wire,
+    compress_bucket,
+    decompress_bucket,
+    plan_for_bucket,
+)
 from .sharding import batch_specs, cache_specs, param_specs  # noqa: F401
+from .steps import CompressedStepState  # noqa: F401

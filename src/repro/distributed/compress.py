@@ -26,26 +26,71 @@ import jax
 import jax.numpy as jnp
 
 from ..core import pipeline as codec
-from ..core.float_bits import F32
+from ..core.float_bits import BF16, F32, F64
 
 
 # ---------------------------------------------------------------------------
 # 1. host-side bucket codec
 # ---------------------------------------------------------------------------
 
+# the wire path is documented "bitwise lossless", so the bucket's dtype is
+# an input, not a constant: f64 optimizer mirrors and bf16 gradients used to
+# be silently cast to f32 here (PR 8 bugfix) — truncation on a lossless path
+_BUCKET_SPECS = {"float64": F64, "float32": F32, "bfloat16": BF16}
+
+
+def _bucket_spec(dtype):
+    spec = _BUCKET_SPECS.get(np.dtype(dtype).name)
+    if spec is None:
+        raise TypeError(
+            f"bucket dtype {np.dtype(dtype).name!r} has no float codec spec; "
+            f"supported: {sorted(_BUCKET_SPECS)} (integer/raw buckets ship "
+            "through bucket_to_wire's raw container records instead)"
+        )
+    return spec
+
+
 def compress_bucket(x: np.ndarray, method: str = "auto",
-                    backend: str | None = None):
-    """``backend="rans"`` routes the winner through the fused device encode
+                    backend: str | None = None, plan=None):
+    """Bitwise-lossless bucket encode at the bucket's OWN dtype
+    (f64/f32/bf16 — no silent cast).
+
+    ``backend="rans"`` routes the winner through the fused device encode
     (one dispatch, one device_get — core/pipeline PHASE2) and the Encoded
-    carries the precompressed frame for the serializer."""
+    carries the precompressed frame for the serializer.
+
+    ``plan`` (a :class:`~repro.core.plans.EncodePlan`, e.g. from
+    :func:`plan_for_bucket`) skips phase-1 selection entirely and encodes
+    through :func:`repro.core.pipeline.encode_with_plan` — the steady-state
+    path of the compressed training step."""
+    x = np.asarray(x)
+    spec = _bucket_spec(x.dtype)
+    if plan is not None:
+        if plan.spec_name != spec.name:
+            raise TypeError(
+                f"encode plan was built for spec {plan.spec_name!r}, bucket "
+                f"is {spec.name!r} — rebuild the plan for this dtype"
+            )
+        return codec.encode_with_plan(x, plan)
     return codec.encode(
-        np.asarray(x, np.float32), method=method, spec=F32, presample=8192,
-        backend=backend,
+        x, method=method, spec=spec, presample=8192, backend=backend,
     )
 
 
 def decompress_bucket(enc) -> np.ndarray:
-    return codec.decode(enc).astype(np.float32)
+    """Inverse of :func:`compress_bucket`; returns the ORIGINAL dtype."""
+    return codec.decode(enc)
+
+
+def plan_for_bucket(x: np.ndarray, backend: str | None = None,
+                    candidates=None, step: int = 0):
+    """Phase-1 selection once, packaged as a serializable
+    :class:`~repro.core.plans.EncodePlan` for this bucket's dtype + stream
+    statistics (see ``docs/plans.md``)."""
+    x = np.asarray(x)
+    spec = _bucket_spec(x.dtype)
+    kw = {"candidates": candidates} if candidates is not None else {}
+    return codec.build_plan(x, spec=spec, backend=backend, step=step, **kw)
 
 
 # wire chunk size for bucket_to_wire: small enough that the receiving pod
@@ -56,12 +101,20 @@ WIRE_CHUNK = 65536
 
 def bucket_to_wire(x: np.ndarray, chunk: int = WIRE_CHUNK,
                    method: str = "auto", backend: str = "zlib",
-                   retry=None) -> bytes:
-    """Bucket -> multi-chunk container blob for the cross-pod DCN path.
+                   retry=None, plan=None) -> bytes:
+    """Bucket -> multi-chunk container blob for the cross-pod DCN path,
+    at the bucket's OWN dtype (f64/f32/bf16 through the codec; any other
+    dtype as raw backend-compressed records) — the wire is documented
+    bitwise-lossless and now is for every dtype, not just f32 (PR 8).
 
     Chunked (unlike :func:`repro.container.dumps`, which frames one record)
     so the receiver's parallel reader can overlap backend decompression of
     chunk k+1 with the inverse transform of chunk k.
+
+    ``plan`` hands the writer a pre-built :class:`~repro.core.plans.EncodePlan`
+    so no selection probe runs at all — per-bucket plans from
+    :class:`~repro.distributed.steps.CompressedStepState` make the encode a
+    pure phase-2 pass.
 
     ``retry`` (a :class:`repro.reliability.RetryPolicy`) re-runs the encode
     on the policy's transient exception classes (``OSError`` by default)
@@ -74,11 +127,11 @@ def bucket_to_wire(x: np.ndarray, chunk: int = WIRE_CHUNK,
 
         import io as _io
 
-        flat = np.ascontiguousarray(np.asarray(x, np.float32)).reshape(-1)
+        flat = np.ascontiguousarray(np.asarray(x)).reshape(-1)
         bio = _io.BytesIO()
         with ContainerWriter(
-            bio, dtype=np.float32, backend=backend, method=method,
-            user_meta={"shape": list(np.shape(x))},
+            bio, dtype=flat.dtype, backend=backend, method=method,
+            user_meta={"shape": list(np.shape(x))}, plan=plan,
         ) as w:
             for s in range(0, flat.size, chunk):
                 w.append(flat[s : s + chunk])
@@ -117,14 +170,15 @@ def bucket_from_wire(blob, parallel: bool | str = "auto",
     return retry_call(decode, policy=retry, label="bucket_from_wire")
 
 
-def bucket_report(x: np.ndarray, backend: str = "zlib") -> dict:
+def bucket_report(x: np.ndarray, backend: str = "zlib", plan=None) -> dict:
     from ..container import dumps
 
-    enc = compress_bucket(x, backend=backend)
+    x = np.asarray(x)
+    enc = compress_bucket(x, backend=backend, plan=plan)
     # full self-describing container, wire-safe (no pickle); a fused-encode
     # payload rides through the serializer without host re-compression
     blob = dumps(enc, backend=backend)
-    raw = np.asarray(x, np.float32).nbytes
+    raw = x.nbytes  # the bucket's true footprint, not a forced-f32 one
     return {
         "method": enc.method,
         "raw_bytes": raw,
@@ -148,6 +202,11 @@ def plane_pack(x: jnp.ndarray, k_planes: int):
     k_planes/32 of the bytes."""
     n = x.shape[0]
     assert n % 32 == 0
+    if n == 0:
+        # empty bucket (a rank that owns no parameters this round): nothing
+        # to pack, trivially exact — `low[0]` below would IndexError
+        return (jnp.zeros((k_planes, 0), jnp.uint32), jnp.bool_(True),
+                jnp.uint32(0))
     w = jax.lax.bitcast_convert_type(x, jnp.uint32)
     # plane p = bit (31-p) of every word, packed 32 words/uint32
     g = w.reshape(n // 32, 32)
@@ -168,6 +227,8 @@ def plane_pack(x: jnp.ndarray, k_planes: int):
 
 def plane_unpack(planes: jnp.ndarray, low0: jnp.ndarray, n: int):
     """Inverse of plane_pack under the exactness condition."""
+    if n == 0:
+        return jnp.zeros(0, jnp.float32)
     k = planes.shape[0]
     shifts = jnp.arange(32, dtype=jnp.uint32)
     w = jnp.zeros((n // 32, 32), jnp.uint32)
@@ -185,6 +246,9 @@ def calibrate_budget(samples: list[np.ndarray], target_exact: float = 0.99) -> i
         ok = 0
         for s in samples:
             w = np.asarray(s, np.float32).view(np.uint32)
+            if w.size == 0:
+                ok += 1  # an empty bucket is trivially exact at any budget
+                continue
             mask = np.uint32((1 << (32 - k)) - 1) if k < 32 else np.uint32(0)
             low = w & mask
             ok += int(np.all(low == low[0]))

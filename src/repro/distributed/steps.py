@@ -1,20 +1,36 @@
-"""jit-able train_step / serve_step builders with sharding attached.
+"""jit-able train_step / serve_step builders with sharding attached, plus
+the always-on compressed-step state machine.
 
 `make_train_step`: loss -> grads -> AdamW, with optional microbatch
 gradient accumulation (lax.scan over microbatches — memory/perf knob used
 by the §Perf hillclimbs).
 `make_serve_step`: one decode step against the sharded cache.
 Both return (fn, in_shardings, out_shardings) ready for jax.jit.
+
+:class:`CompressedStepState` makes gradient/state compression ride the
+training step instead of serializing after it: one serializable
+:class:`~repro.core.plans.EncodePlan` per bucket, reused every step (pure
+phase-2 encode — zero selection dispatches on a steady stream), full
+re-selection only when the bucket's stream-statistics fingerprint drifts or
+a refresh interval elapses, and :meth:`CompressedStepState.overlap` runs
+the bucket encodes on a host thread pool *while* the (async-dispatched)
+device step executes.
 """
 from __future__ import annotations
 
+import os
+import threading
+from concurrent.futures import ThreadPoolExecutor
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..core import plans as _plans
 from ..models.registry import Model
 from ..optim import adamw_update
+from .compress import WIRE_CHUNK, _bucket_spec, bucket_to_wire, plan_for_bucket
 from .sharding import batch_specs, cache_specs, param_specs
 
 
@@ -35,12 +51,24 @@ def make_train_step(model: Model, mesh, *, lr=3e-4, fsdp=False, n_micro=1):
 
         if n_micro == 1:
             loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            # the accumulation branch below hands the optimizer f32 grads;
+            # the single-microbatch path must match or flipping n_micro
+            # changes the numerics of the update
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
         else:
             def micro(b):
-                return jax.tree.map(
-                    lambda x: x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:]),
-                    b,
-                )
+                def reshape(x):
+                    if x.shape[0] % n_micro:
+                        raise ValueError(
+                            f"batch leading dim {x.shape[0]} is not divisible "
+                            f"by n_micro={n_micro}; pad or rebatch — silent "
+                            "truncation would drop examples"
+                        )
+                    return x.reshape(
+                        (n_micro, x.shape[0] // n_micro) + x.shape[1:]
+                    )
+
+                return jax.tree.map(reshape, b)
 
             mb = micro(batch)
 
@@ -122,3 +150,182 @@ def make_prefill_step(model: Model, mesh):
         return model.prefill(params, batch)
 
     return prefill_step
+
+
+# ---------------------------------------------------------------------------
+# always-on compressed training step
+# ---------------------------------------------------------------------------
+
+_ENCODE_POOL = None
+_ENCODE_POOL_LOCK = threading.Lock()
+
+
+def _encode_pool() -> ThreadPoolExecutor:
+    """Shared host-side encode pool for :meth:`CompressedStepState.overlap`.
+
+    The encode is numpy/zlib/rans host work that releases the GIL in its hot
+    loops; a small pool overlaps it with the async-dispatched device step
+    without oversubscribing the host cores XLA also wants."""
+    global _ENCODE_POOL
+    with _ENCODE_POOL_LOCK:
+        if _ENCODE_POOL is None:
+            workers = max(2, min(4, (os.cpu_count() or 2) // 2))
+            _ENCODE_POOL = ThreadPoolExecutor(
+                max_workers=workers, thread_name_prefix="repro-encode"
+            )
+        return _ENCODE_POOL
+
+
+STATE_FORMAT = 1
+
+
+class CompressedStepState:
+    """Per-bucket encode plans threaded through the training loop.
+
+    Holds one serializable :class:`~repro.core.plans.EncodePlan` per named
+    bucket (gradient bucket, optimizer-mirror leaf, ...) in a locked LRU
+    :class:`~repro.core.plans.PlanStore`.  On every step, each bucket's
+    stream fingerprint is compared against the plan's; the plan is reused
+    (pure phase-2 encode, zero selection dispatches) unless
+
+    * there is no plan yet (``cold``), or
+    * the bucket's dtype changed (``dtype``), or
+    * ``refresh_steps`` have elapsed since selection (``interval``), or
+    * fingerprint drift exceeds ``drift_threshold`` (``drift``).
+
+    Reuse is always safe: phase-2 apply+verify still runs per chunk, so a
+    stale plan can cost ratio, never correctness.
+
+    ``to_json``/``from_json`` round-trip the whole state (plans + step
+    counter) as plain JSON — :class:`repro.checkpoint.CheckpointManager`
+    persists it so warm restarts skip re-selection entirely.
+    """
+
+    def __init__(self, backend: str | None = "zlib", candidates=None,
+                 refresh_steps: int | None = None,
+                 drift_threshold: float | None = None,
+                 max_buckets: int = 512):
+        self.backend = backend
+        self.candidates = candidates
+        self.refresh_steps = (_plans.plan_refresh_steps()
+                              if refresh_steps is None else int(refresh_steps))
+        self.drift_threshold = (_plans.plan_drift_threshold()
+                                if drift_threshold is None
+                                else float(drift_threshold))
+        self.plans = _plans.PlanStore(max_items=max_buckets)
+        self.step = 0
+        self._lock = threading.Lock()
+        # cumulative decision counters — the step benchmark gates these
+        # exactly (steady stream => reselections stays flat)
+        self.reuses = 0
+        self.reselections = 0
+        self.cold_selections = 0
+        self.drift_refreshes = 0
+        self.interval_refreshes = 0
+        self.dtype_refreshes = 0
+
+    def begin_step(self) -> int:
+        with self._lock:
+            self.step += 1
+            return self.step
+
+    def _refresh_reason(self, plan, spec_name: str, fp) -> str | None:
+        if plan is None:
+            return "cold"
+        if plan.spec_name != spec_name:
+            return "dtype"
+        if self.refresh_steps and self.step - plan.step >= self.refresh_steps:
+            return "interval"
+        if plan.fingerprint.drift(fp) > self.drift_threshold:
+            return "drift"
+        return None
+
+    def plan_for(self, name: str, x):
+        """Current plan for bucket ``name`` carrying data ``x`` — reused if
+        still fresh, re-selected otherwise."""
+        x = np.asarray(x)
+        spec = _bucket_spec(x.dtype)
+        fp = _plans.StreamFingerprint.from_array(x)
+        plan = self.plans.get(name)
+        reason = self._refresh_reason(plan, spec.name, fp)
+        if reason is None:
+            with self._lock:
+                self.reuses += 1
+            return plan
+        plan = plan_for_bucket(x, backend=self.backend,
+                               candidates=self.candidates, step=self.step)
+        self.plans.put(name, plan)
+        with self._lock:
+            self.reselections += 1
+            if reason == "cold":
+                self.cold_selections += 1
+            elif reason == "dtype":
+                self.dtype_refreshes += 1
+            elif reason == "interval":
+                self.interval_refreshes += 1
+            else:
+                self.drift_refreshes += 1
+        return plan
+
+    def to_wire(self, name: str, x, chunk: int = WIRE_CHUNK,
+                retry=None) -> bytes:
+        """Bucket -> wire blob through this bucket's (possibly refreshed)
+        plan; selection runs only when the plan policy says so."""
+        plan = self.plan_for(name, x)
+        return bucket_to_wire(
+            np.asarray(x), chunk=chunk,
+            backend=plan.backend if plan.backend else "zlib",
+            plan=plan, retry=retry,
+        )
+
+    def compress_tree(self, buckets: dict, chunk: int = WIRE_CHUNK) -> dict:
+        """Encode every named bucket; returns {name: wire_blob}."""
+        return {k: self.to_wire(k, v, chunk=chunk) for k, v in buckets.items()}
+
+    def overlap(self, buckets: dict, compute, chunk: int = WIRE_CHUNK):
+        """Run ``compute()`` (typically the jitted device step — dispatch is
+        async, so the host is free) while the bucket encodes run on the host
+        pool.  Returns ``(compute_result, {name: wire_blob})``.
+
+        Bucket names within one call must be distinct (they are — a tree's
+        leaf paths); the PlanStore itself is locked, so concurrent calls are
+        safe, merely less deterministic about which thread pays a refresh."""
+        pool = _encode_pool()
+        futs = {k: pool.submit(self.to_wire, k, v, chunk)
+                for k, v in buckets.items()}
+        result = compute() if compute is not None else None
+        blobs = {k: f.result() for k, f in futs.items()}
+        return result, blobs
+
+    def counters(self) -> dict:
+        with self._lock:
+            return {
+                "step": self.step,
+                "reuses": self.reuses,
+                "reselections": self.reselections,
+                "cold_selections": self.cold_selections,
+                "drift_refreshes": self.drift_refreshes,
+                "interval_refreshes": self.interval_refreshes,
+                "dtype_refreshes": self.dtype_refreshes,
+            }
+
+    # -- persistence (plain JSON; superset of plans_to_json's bundle) -------
+
+    def to_json(self) -> dict:
+        obj = _plans.plans_to_json(dict(self.plans.items()))
+        obj["state_format"] = STATE_FORMAT
+        obj["step"] = self.step
+        obj["backend"] = self.backend
+        obj["refresh_steps"] = self.refresh_steps
+        obj["drift_threshold"] = self.drift_threshold
+        return obj
+
+    @classmethod
+    def from_json(cls, obj: dict, **kw) -> "CompressedStepState":
+        st = cls(**kw)
+        for name, plan in _plans.plans_from_json(obj).items():
+            st.plans.put(name, plan)
+        st.step = int(obj.get("step", 0))
+        if "backend" in obj and "backend" not in kw:
+            st.backend = obj["backend"]
+        return st
