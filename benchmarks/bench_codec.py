@@ -416,7 +416,7 @@ def run(rows: list, smoke: bool = False):
     """smoke=True: 10k-element CI-sized pass over the codec path only
     (skips model checkpoint / gradient-bucket benches); results go to
     BENCH_codec.smoke.json so the tracked 100k baseline stays intact."""
-    from . import bench_step
+    from . import bench_serve, bench_step
 
     if smoke:
         bench_transforms(rows, n_elems=10_000)
@@ -426,6 +426,7 @@ def run(rows: list, smoke: bool = False):
         bench_gd(rows)
         bench_kernels(rows)
         bench_step.run(rows, smoke=True)
+        bench_serve.run(rows, smoke=True)
     else:
         bench_transforms(rows)
         bench_container(rows)
@@ -436,4 +437,5 @@ def run(rows: list, smoke: bool = False):
         bench_checkpoint(rows)
         bench_grad_compress(rows)
         bench_step.run(rows)
+        bench_serve.run(rows)
     _dump_json(smoke)

@@ -1,13 +1,17 @@
-"""Quickstart: the paper's technique end-to-end in 40 lines.
+"""Quickstart: the paper's technique end-to-end, then the production I/O
+layer (plan-aware container write, adaptive parallel read, partial read).
 
 Takes an IoT-like float64 time series, picks the best lossless transform,
 compresses with GreedyGD, verifies bitwise round-trip, prints δ_CR.
 
   PYTHONPATH=src python examples/quickstart.py
 """
+import io
+
 import numpy as np
 
 from repro.compression.metrics import evaluate, size_fn_for
+from repro.container import ContainerReader, ContainerWriter
 from repro.core import pipeline
 from repro.data import chicago_taxi_fares
 
@@ -30,3 +34,19 @@ print(f"shared bits S_TOT: {rep.shared_before['S_TOT']} -> {rep.shared_after['S_
 back = pipeline.decode(enc)
 assert np.array_equal(back.view(np.uint64), x.view(np.uint64))
 print("round-trip: BITWISE IDENTICAL ✓")
+
+# 4. the I/O layer (docs/format.md): selection runs ONCE as a reusable plan
+#    (docs/plans.md), every chunk encodes phase-2-only through it, and reads
+#    ride the adaptive parallel gate — including decoding just a sub-range
+plan = pipeline.build_plan(x)
+buf = io.BytesIO()
+with ContainerWriter(buf, dtype=x.dtype, plan=plan) as w:
+    for i in range(0, x.size, 256):
+        w.append(x[i : i + 256])
+with ContainerReader(buf.getvalue()) as r:
+    full = r.read_all(parallel="auto")
+    part = r.read_range(300, 700)  # decodes only the covering chunks
+assert np.array_equal(full.view(np.uint64), x.view(np.uint64))
+assert np.array_equal(part.view(np.uint64), x[300:700].view(np.uint64))
+print(f"container: {r.nchunks} chunks, ratio={r.ratio():.3f}, "
+      f"plan-encoded, partial read [300:700) ✓")

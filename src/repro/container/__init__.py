@@ -36,11 +36,14 @@ from .format import (  # noqa: F401
 )
 from .io import (  # noqa: F401
     PARALLEL_MIN_BYTES,
+    POOL_POLICY,
+    AdaptivePoolPolicy,
     ContainerReader,
     ContainerWriter,
     default_decode_workers,
     dumps,
     in_decode_pool,
     loads,
+    pool_min_work_us,
     shared_decode_pool,
 )

@@ -22,11 +22,13 @@ caller.  Semantics: docs/format.md §Parallel reads.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import io as _io
 import os
 import struct
 import threading
+import time
 import zlib
 from concurrent.futures import ThreadPoolExecutor
 from pathlib import Path
@@ -86,12 +88,106 @@ def in_decode_pool() -> bool:
     return threading.current_thread().name.startswith(_POOL_THREAD_PREFIX)
 
 
-# ``parallel="auto"`` threshold: below this much raw (decoded) data the
-# pool's wake-up + GIL hand-off cost eats the overlap win, so auto mode
-# stays serial.  4 MiB is conservative — measured crossover on a 2-vCPU
-# CI container is ~1-4 MiB; many-core hosts break even earlier (tune per
-# deployment if needed, it is read at call time).
+# ``parallel="auto"`` cold-start threshold: below this much raw (decoded)
+# data the pool's wake-up + GIL hand-off cost eats the overlap win, so auto
+# mode stays serial until the adaptive policy below has real measurements.
+# 4 MiB is conservative — measured crossover on a 2-vCPU CI container is
+# ~1-4 MiB; many-core hosts break even earlier (read at call time).
 PARALLEL_MIN_BYTES = 4 << 20
+
+# adaptive-policy work threshold: a span whose *estimated serial decode
+# time* (from measured throughput) falls below this many microseconds is
+# decoded serially even when the caller asked for the pool — the pool's
+# scheduling cost would dominate.  Env knob, read at call time
+# (docs/knobs.md).
+DEFAULT_POOL_MIN_WORK_US = 3000.0
+
+
+def pool_min_work_us() -> float:
+    """Adaptive-gate work threshold (``REPRO_POOL_MIN_WORK_US`` override)."""
+    v = os.environ.get("REPRO_POOL_MIN_WORK_US", "").strip()
+    return float(v) if v else DEFAULT_POOL_MIN_WORK_US
+
+
+class AdaptivePoolPolicy:
+    """Measured-throughput gate for parallel container decode (the PR 3
+    carry: ``parallel=True`` safe to default-on under load).
+
+    PR 3 gated ``parallel="auto"`` on a static byte threshold.  This policy
+    replaces that with *probed* span throughput: every ``read_all`` /
+    ``read_span`` records its decoded bytes and wall time per path, and the
+    gate parallelizes a span only when
+
+    * its **estimated serial decode time** (span bytes / measured serial
+      throughput) exceeds :func:`pool_min_work_us` — below that, pool
+      wake-up + GIL hand-off cost more than they overlap; and
+    * the pool has not **measured slower than serial** on this host (an
+      oversubscribed or single-core box demotes itself) — skipped for
+      ``parallel=True`` callers, who keep the pool for any non-trivial span.
+
+    Cold (fewer than :data:`MIN_SAMPLES` serial measurements) the gate falls
+    back to the static :data:`PARALLEL_MIN_BYTES` prior so process-start
+    behavior is deterministic.  Throughputs are EWMAs (bytes/us) so the gate
+    tracks load shifts; all state sits behind one lock.  ``decisions`` is a
+    cumulative {serial, parallel} counter for tests and serving stats.
+    """
+
+    MIN_SAMPLES = 3
+    EWMA = 0.2  # weight of the newest sample
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._tp: dict[str, float | None] = {"serial": None, "parallel": None}
+        self._n = {"serial": 0, "parallel": 0}
+        self.decisions = {"serial": 0, "parallel": 0}
+
+    def record(self, kind: str, nbytes: int, us: float) -> None:
+        """Feed one measured decode: ``kind`` in {serial, parallel}."""
+        if nbytes <= 0 or us <= 0:
+            return
+        tp = nbytes / us
+        with self._lock:
+            cur = self._tp[kind]
+            self._tp[kind] = tp if cur is None else (
+                (1 - self.EWMA) * cur + self.EWMA * tp
+            )
+            self._n[kind] += 1
+
+    def throughput(self, kind: str) -> float | None:
+        """Current EWMA throughput in bytes/us (None = no samples)."""
+        with self._lock:
+            return self._tp[kind]
+
+    def samples(self, kind: str) -> int:
+        with self._lock:
+            return self._n[kind]
+
+    def should_parallel(self, nbytes: int, forced: bool = False) -> bool:
+        """Gate one span: ``forced`` is a ``parallel=True`` caller (keeps
+        the pool unless the span is below the work threshold)."""
+        with self._lock:
+            stp, n = self._tp["serial"], self._n["serial"]
+            ptp = self._tp["parallel"]
+        if n < self.MIN_SAMPLES or not stp:
+            par = forced or nbytes >= PARALLEL_MIN_BYTES  # cold prior
+        else:
+            par = nbytes / stp >= pool_min_work_us()
+            if par and not forced and ptp is not None and ptp < stp:
+                par = False  # pool measured slower than serial on this host
+        with self._lock:
+            self.decisions["parallel" if par else "serial"] += 1
+        return par
+
+    def reset(self) -> None:
+        with self._lock:
+            self._tp = {"serial": None, "parallel": None}
+            self._n = {"serial": 0, "parallel": 0}
+            self.decisions = {"serial": 0, "parallel": 0}
+
+
+# process-wide policy instance: every reader's measurements sharpen every
+# other reader's gate (tests swap in a fresh instance to pin cold behavior)
+POOL_POLICY = AdaptivePoolPolicy()
 
 
 class ContainerWriter:
@@ -351,6 +447,7 @@ class ContainerReader:
     def __init__(self, path_or_buf, salvage: bool = False):
         self._io_lock = threading.Lock()
         self._label = None
+        self._offsets: list[int] | None = None
         self.salvage_report = None
         if isinstance(path_or_buf, (bytes, bytearray, memoryview)):
             self._f = _io.BytesIO(bytes(path_or_buf))
@@ -436,6 +533,36 @@ class ContainerReader:
     def n(self) -> int:
         """Total elements across all chunks."""
         return sum(e["n"] for e in self._entries)
+
+    def chunk_offsets(self) -> list[int]:
+        """Cumulative element offsets: ``offsets[i]`` is the index of chunk
+        i's first element, ``offsets[nchunks]`` the total element count.
+        Built once per reader (idempotent, so benign under races)."""
+        offs = self._offsets
+        if offs is None:
+            offs = [0]
+            for e in self._entries:
+                offs.append(offs[-1] + e["n"])
+            self._offsets = offs
+        return offs
+
+    def covering_chunks(self, start: int, stop: int) -> tuple[int, int]:
+        """The minimal chunk range ``[lo, hi)`` whose elements cover the
+        element range ``[start, stop)`` — the partial-read unit (and the
+        serving layer's cache key granularity).  ``start == stop`` maps to
+        the empty range ``(lo, lo)``."""
+        offs = self.chunk_offsets()
+        total = offs[-1]
+        if not 0 <= start <= stop <= total:
+            raise IndexError(
+                f"element range [{start}, {stop}) out of bounds for a "
+                f"container of {total} elements"
+            )
+        lo = bisect.bisect_right(offs, start) - 1
+        if start == stop:
+            return lo, lo
+        hi = bisect.bisect_left(offs, stop, lo)
+        return lo, hi
 
     def chunk_info(self, i: int) -> dict:
         e = self._entries[i]
@@ -557,50 +684,80 @@ class ContainerReader:
         index-derived offset).  The first failing chunk's exception is
         re-raised here, in the calling thread.
 
-        ``parallel="auto"`` parallelizes only when the stream is big enough
-        to amortize the pool's scheduling cost (>= :data:`PARALLEL_MIN_BYTES`
-        of raw data) — the right default for consumers that see both tiny
-        and huge containers."""
+        Both ``parallel="auto"`` and ``parallel=True`` ride the adaptive
+        pool gate (:data:`POOL_POLICY`): the pool engages only when the
+        span's estimated serial decode time — from *measured* throughput —
+        exceeds :func:`pool_min_work_us` (cold processes fall back to the
+        static :data:`PARALLEL_MIN_BYTES` prior).  ``parallel=True`` differs
+        only in being exempt from the pool-slower-than-serial demotion and
+        in its cold default (pool on).  An explicit ``workers`` count always
+        forces the dedicated pool; docs/serving.md §Adaptive pool."""
+        return self.read_span(0, self.nchunks, parallel=parallel,
+                              workers=workers)
+
+    def read_span(self, lo: int, hi: int, parallel: bool | str = False,
+                  workers: int | None = None) -> np.ndarray:
+        """Decode chunks ``[lo, hi)``, concatenated flat — the partial-read
+        primitive under :meth:`read_all` (the full range) and
+        :meth:`read_range` (element ranges).  Same parallel semantics and
+        byte-identity contract as :meth:`read_all`."""
         workers = workers or None  # 0 means "default"
-        n_chunks = self.nchunks
+        if not 0 <= lo <= hi <= self.nchunks:
+            raise IndexError(
+                f"chunk span [{lo}, {hi}) out of bounds for "
+                f"{self.nchunks} chunks"
+            )
+        n_chunks = hi - lo
         if not n_chunks:
             return np.zeros(0, self.dtype)
+        all_offs = self.chunk_offsets()
+        span_bytes = (all_offs[hi] - all_offs[lo]) * self.dtype.itemsize
         if parallel == "auto":
-            parallel = self.n * self.dtype.itemsize >= PARALLEL_MIN_BYTES
+            parallel = POOL_POLICY.should_parallel(span_bytes)
+        elif parallel and workers is None:
+            # an explicit workers count always forces the dedicated pool;
+            # bare parallel=True rides the adaptive gate (tiny spans serial)
+            parallel = POOL_POLICY.should_parallel(span_bytes, forced=True)
         if not parallel or n_chunks <= 1 or (workers is None
                                              and in_decode_pool()):
-            return np.concatenate(
-                [self.read_chunk(i).reshape(-1) for i in range(n_chunks)]
+            t0 = time.perf_counter()
+            out = np.concatenate(
+                [self.read_chunk(i).reshape(-1) for i in range(lo, hi)]
             )
-        sizes = [e["n"] for e in self._entries]
+            POOL_POLICY.record("serial", span_bytes,
+                               (time.perf_counter() - t0) * 1e6)
+            return out
+        t0 = time.perf_counter()
+        sizes = [e["n"] for e in self._entries[lo:hi]]
         offs = [0]
         for s in sizes:
             offs.append(offs[-1] + s)
         out = np.empty(offs[-1], self.dtype)
 
-        def decode_into(i: int) -> None:
+        def decode_into(k: int) -> None:
             # RAW/identity records (payload == output bytes) decompress
             # straight into the preallocated output through the backend's
             # decompress_into slot — no per-chunk plaintext assembly under
             # the GIL; transform records take the regular decode + copy.
+            i = lo + k
             obj = F.deserialize_chunk_into(
-                self._record(i), self._be, out[offs[i] : offs[i + 1]],
+                self._record(i), self._be, out[offs[k] : offs[k + 1]],
                 spec_name=self.spec_name or None, dtype=self.dtype,
             )
             if obj is None:
                 return
             flat = (pipeline.decode(obj)
                     if isinstance(obj, pipeline.Encoded) else obj).reshape(-1)
-            if flat.size != sizes[i]:
+            if flat.size != sizes[k]:
                 raise F.ContainerFormatError(
                     f"chunk {i}: record holds {flat.size} elements, index "
-                    f"claims {sizes[i]}"
+                    f"claims {sizes[k]}"
                 )
-            out[offs[i] : offs[i + 1]] = flat
+            out[offs[k] : offs[k + 1]] = flat
 
         def decode_span(span: range) -> None:
-            for i in span:
-                decode_into(i)
+            for k in span:
+                decode_into(k)
 
         # one task per worker over a contiguous span, not one per chunk:
         # chunk-granular futures would pay a sync round-trip per record,
@@ -619,7 +776,7 @@ class ContainerReader:
                 _watchdog.await_or_fallback(
                     fut, lambda k=k: decode_span(spans[k]),
                     f"decode span {k + 1}/{len(spans)} "
-                    f"(chunks {spans[k].start}..{spans[k].stop - 1})",
+                    f"(chunks {lo + spans[k].start}..{lo + spans[k].stop - 1})",
                 )
 
         if workers is not None:
@@ -629,7 +786,26 @@ class ContainerReader:
                 drain(pool)
         else:
             drain(shared_decode_pool())
+        POOL_POLICY.record("parallel", span_bytes,
+                           (time.perf_counter() - t0) * 1e6)
         return out
+
+    def read_range(self, start: int, stop: int | None = None,
+                   parallel: bool | str = "auto",
+                   workers: int | None = None) -> np.ndarray:
+        """Decode only the elements ``[start, stop)`` — a partial-tensor
+        read riding the O(1) chunk index: exactly the chunks covering the
+        range are fetched and decoded (:meth:`covering_chunks`), everything
+        else stays untouched on disk.  ``stop=None`` means "to the end".
+        Out-of-bounds ranges raise ``IndexError`` loudly (no Python-slice
+        clamping: a serving request past the tensor is a caller bug).
+        Byte-identical to ``read_all()[start:stop]`` by construction."""
+        offs = self.chunk_offsets()
+        if stop is None:
+            stop = offs[-1]
+        lo, hi = self.covering_chunks(start, stop)
+        span = self.read_span(lo, hi, parallel=parallel, workers=workers)
+        return span[start - offs[lo] : stop - offs[lo]]
 
     def close(self) -> None:
         if self._owns:

@@ -31,14 +31,25 @@ class ShardStore:
     def _path(self, name: str) -> Path:
         return self.root / f"{name}.fpc"
 
+    def path(self, name: str) -> Path:
+        """The shard's container path (the serving layer opens persistent
+        readers over it instead of re-opening per call)."""
+        return self._path(name)
+
     def write(self, name: str, x: np.ndarray, chunk: int = 65536,
-              method: str = "auto", durable: bool = True) -> dict:
+              method: str = "auto", durable: bool = True,
+              plan=None) -> dict:
         """Write one shard **atomically and durably**: bytes stage to a
         same-directory temp file and only an fsynced, complete container is
         renamed onto ``<name>.fpc`` — a failed or crashed write (injected
         backend fault, ENOSPC, kill -9) leaves any previous version of the
         shard bitwise intact (tests/test_reliability.py,
-        tests/test_crash_matrix.py)."""
+        tests/test_crash_matrix.py).
+
+        ``plan`` (a :class:`repro.core.plans.EncodePlan`) skips the writer's
+        selection probe entirely — every chunk encodes phase-2-only through
+        the plan's winner/fallback order (docs/plans.md), the right call
+        when many shards share one distribution."""
         flat = np.ascontiguousarray(x).reshape(-1)
         nchunks = max(1, -(-flat.size // chunk))
         with ContainerWriter(
@@ -47,6 +58,7 @@ class ShardStore:
             backend=self.backend,
             method=method,
             durable=durable,
+            plan=plan,
             user_meta={
                 "dtype": str(x.dtype),
                 "shape": list(x.shape),
@@ -85,6 +97,15 @@ class ShardStore:
         """Random access: decode one chunk without touching the rest."""
         with ContainerReader(self._path(name)) as r:
             return r.read_chunk(i).reshape(-1)
+
+    def read_slice(self, name: str, start: int, stop: int | None = None
+                   ) -> np.ndarray:
+        """Elements ``[start, stop)`` of the flattened shard, decoding only
+        the covering chunks (``ContainerReader.read_range`` riding the O(1)
+        chunk index) — equal to ``read(name).reshape(-1)[start:stop]``
+        without paying for the rest of the shard."""
+        with ContainerReader(self._path(name)) as r:
+            return r.read_range(start, stop)
 
     def iter_chunks(self, name: str, prefetch: int = 2):
         """Ordered streaming iteration over a shard's decoded chunks with up

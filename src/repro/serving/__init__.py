@@ -1,0 +1,26 @@
+"""High-fan-out compressed serving: thousands of concurrent readers over
+compressed containers (ROADMAP item 3).
+
+The layer turns the container read path into a *server*: hot decoded spans
+are cached (:class:`SpanCache`), concurrent misses of one span share a
+single decode (:class:`SingleFlight`), slice requests decode only their
+covering chunks (:meth:`TensorServer.read_slice`), and every decode rides
+the adaptive pool gate so the pool engages exactly when measured span
+throughput says it pays.  Semantics and knobs: docs/serving.md; traffic
+replay benchmark: benchmarks/bench_serve.py.
+"""
+from .cache import (  # noqa: F401
+    DEFAULT_CACHE_BYTES,
+    SpanCache,
+    default_cache_bytes,
+)
+from .coalesce import SingleFlight  # noqa: F401
+from .server import TensorServer  # noqa: F401
+from .traffic import (  # noqa: F401
+    Request,
+    percentiles,
+    replay,
+    serve_one,
+    zipf_schedule,
+    zipf_weights,
+)

@@ -1,0 +1,139 @@
+"""Bounded, locked LRU cache of *decoded* chunk spans.
+
+The serving hot path is dominated by decode (backend decompression +
+inverse transform), not by I/O: once a tensor span has been decoded for one
+request, every subsequent reader of the same span should be served from
+memory.  :class:`SpanCache` is the primitive: a byte-budgeted LRU keyed by
+``(container id, chunk lo, chunk hi)`` — the covering-chunk range of a
+request (:meth:`repro.container.ContainerReader.covering_chunks`), so a
+full read and every slice whose covering chunks coincide share one entry.
+
+Design points (docs/serving.md §Cache):
+
+* **byte budget, not item count** — tensors vary by orders of magnitude;
+  the knob is ``max_bytes`` (``REPRO_SERVE_CACHE_BYTES`` default, read at
+  construction).  Eviction pops strict LRU order until under budget.
+* **recency on get** — a hot tensor survives any number of cold inserts
+  (same contract the plan store pins; regression-tested).
+* **read-only values** — cached arrays are marked non-writeable before
+  insertion so no reader can corrupt another reader's bytes; callers that
+  need a mutable tensor copy explicitly.
+* **every read-modify-write holds one lock** — thousands of concurrent
+  readers share one instance.
+* **counters** — cumulative ``hits`` / ``misses`` / ``evictions`` /
+  ``insertions`` / ``oversize`` (+ current ``bytes``), exact by
+  construction; the traffic-replay benchmark gates them exactly.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from collections import OrderedDict
+
+import numpy as np
+
+DEFAULT_CACHE_BYTES = 64 << 20
+
+
+def default_cache_bytes() -> int:
+    """Span-cache byte budget (``REPRO_SERVE_CACHE_BYTES`` env override;
+    ``0`` disables caching entirely)."""
+    v = os.environ.get("REPRO_SERVE_CACHE_BYTES", "").strip()
+    return int(v) if v else DEFAULT_CACHE_BYTES
+
+
+class SpanCache:
+    """Byte-budgeted locked LRU of decoded spans (``key -> np.ndarray``)."""
+
+    def __init__(self, max_bytes: int | None = None):
+        if max_bytes is None:
+            max_bytes = default_cache_bytes()
+        if max_bytes < 0:
+            raise ValueError(f"max_bytes must be >= 0, got {max_bytes}")
+        self.max_bytes = int(max_bytes)
+        self._d: OrderedDict = OrderedDict()
+        self._lock = threading.Lock()
+        self.bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.insertions = 0
+        self.oversize = 0
+
+    def get(self, key) -> np.ndarray | None:
+        with self._lock:
+            arr = self._d.get(key)
+            if arr is None:
+                self.misses += 1
+                return None
+            self._d.move_to_end(key)  # hit refreshes recency
+            self.hits += 1
+            return arr
+
+    def put(self, key, arr: np.ndarray) -> bool:
+        """Insert a decoded span; returns False when it exceeds the whole
+        budget (served but never cached — counted in ``oversize``).  The
+        array is frozen (non-writeable) as a side effect: from here on it
+        may be handed to any number of readers."""
+        arr.flags.writeable = False
+        nb = int(arr.nbytes)
+        if nb > self.max_bytes:
+            with self._lock:
+                self.oversize += 1
+            return False
+        with self._lock:
+            old = self._d.pop(key, None)
+            if old is not None:
+                self.bytes -= old.nbytes
+            self._d[key] = arr
+            self.bytes += nb
+            self.insertions += 1
+            while self.bytes > self.max_bytes:
+                _, ev = self._d.popitem(last=False)  # strict LRU end
+                self.bytes -= ev.nbytes
+                self.evictions += 1
+        return True
+
+    def invalidate(self, key) -> bool:
+        """Drop one entry (e.g. a rewritten shard); True when it existed."""
+        with self._lock:
+            arr = self._d.pop(key, None)
+            if arr is None:
+                return False
+            self.bytes -= arr.nbytes
+            return True
+
+    def clear(self) -> None:
+        with self._lock:
+            self._d.clear()
+            self.bytes = 0
+
+    def keys(self) -> list:
+        with self._lock:
+            return list(self._d.keys())
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "insertions": self.insertions,
+                "oversize": self.oversize,
+                "bytes": self.bytes,
+                "entries": len(self._d),
+                "max_bytes": self.max_bytes,
+            }
+
+    def reset_stats(self) -> None:
+        with self._lock:
+            self.hits = self.misses = self.evictions = 0
+            self.insertions = self.oversize = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._d)
+
+    def __contains__(self, key) -> bool:
+        with self._lock:
+            return key in self._d

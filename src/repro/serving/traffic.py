@@ -1,0 +1,101 @@
+"""Zipfian traffic generation + multi-client replay for the tensor server.
+
+Serving load is never uniform: a few hot tensors (embeddings, first-layer
+weights, popular tenants' shards) take most of the reads — the regime where
+the decoded-span cache and request coalescing pay.  This module builds a
+**deterministic** zipfian request schedule (seeded; the benchmark gates the
+resulting cache counters *exactly*, so the schedule must be bit-reproducible
+across hosts) and replays it from N client threads, recording per-request
+latency for p50/p99 rows (docs/serving.md §Benchmark).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One serving request: a full-tensor read, or (``start``/``stop`` set)
+    an element-slice read."""
+    name: str
+    start: int | None = None
+    stop: int | None = None
+
+    @property
+    def is_slice(self) -> bool:
+        return self.start is not None
+
+
+def zipf_weights(n_items: int, s: float = 1.1) -> np.ndarray:
+    """Normalized zipfian popularity over ranks 0..n_items-1."""
+    w = 1.0 / np.arange(1, n_items + 1) ** s
+    return w / w.sum()
+
+
+def zipf_schedule(sizes: dict[str, int], n_requests: int, s: float = 1.1,
+                  slice_frac: float = 0.5, seed: int = 0) -> list[Request]:
+    """A deterministic request mix over ``sizes`` (tensor name -> element
+    count): names are ranked in sorted order (rank 0 = hottest), each
+    request hits a zipfian-drawn tensor, and ``slice_frac`` of requests read
+    a random sub-range instead of the full tensor."""
+    names = sorted(sizes)
+    if not names:
+        raise ValueError("zipf_schedule needs at least one tensor")
+    rng = np.random.default_rng(seed)
+    picks = rng.choice(len(names), size=n_requests, p=zipf_weights(len(names), s))
+    sliced = rng.random(n_requests) < slice_frac
+    out: list[Request] = []
+    for k in range(n_requests):
+        name = names[int(picks[k])]
+        n = sizes[name]
+        if sliced[k] and n > 1:
+            a, b = sorted(int(v) for v in rng.integers(0, n + 1, 2))
+            if a == b:
+                b = min(n, a + 1)
+            out.append(Request(name, a, b))
+        else:
+            out.append(Request(name))
+    return out
+
+
+def serve_one(server, req: Request) -> np.ndarray:
+    return (server.read_slice(req.name, req.start, req.stop)
+            if req.is_slice else server.read(req.name))
+
+
+def replay(server, schedule: list[Request], clients: int = 1) -> np.ndarray:
+    """Replay the schedule round-robin across ``clients`` threads against
+    ``server``; returns per-request latency in microseconds (indexed like
+    ``schedule``).  Worker exceptions re-raise here after join."""
+    lat = np.zeros(len(schedule))
+    errors: list[BaseException] = []
+
+    def client(k: int) -> None:
+        try:
+            for i in range(k, len(schedule), clients):
+                t0 = time.perf_counter()
+                serve_one(server, schedule[i])
+                lat[i] = (time.perf_counter() - t0) * 1e6
+        except BaseException as e:  # surfaced after join
+            errors.append(e)
+
+    if clients <= 1:
+        client(0)
+    else:
+        threads = [threading.Thread(target=client, args=(k,), daemon=True)
+                   for k in range(clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    if errors:
+        raise errors[0]
+    return lat
+
+
+def percentiles(lat_us: np.ndarray, ps=(50, 99)) -> dict[int, float]:
+    return {p: float(np.percentile(lat_us, p)) for p in ps}

@@ -149,8 +149,10 @@ def test_prefetch_window_is_bounded(tmp_path):
 
 
 def test_parallel_auto_size_gate(tmp_path, monkeypatch):
-    """parallel="auto" must stay serial below PARALLEL_MIN_BYTES and engage
-    the decode pool above it (correct bytes either way)."""
+    """A COLD adaptive policy must fall back to the static PARALLEL_MIN_BYTES
+    prior: parallel="auto" stays serial below it and engages the decode pool
+    above it (correct bytes either way).  Warm-policy behavior is pinned in
+    tests/test_serving.py."""
     from repro.container import io as cio
 
     path, x = _stream(tmp_path, nchunks=4)
@@ -163,9 +165,11 @@ def test_parallel_auto_size_gate(tmp_path, monkeypatch):
 
     monkeypatch.setattr(cio, "shared_decode_pool", counting_pool)
     with ContainerReader(path) as r:
+        monkeypatch.setattr(cio, "POOL_POLICY", cio.AdaptivePoolPolicy())
         monkeypatch.setattr(cio, "PARALLEL_MIN_BYTES", x.nbytes + 1)
         small = r.read_all(parallel="auto")
         assert used_pool["n"] == 0, "auto must stay serial below the gate"
+        monkeypatch.setattr(cio, "POOL_POLICY", cio.AdaptivePoolPolicy())
         monkeypatch.setattr(cio, "PARALLEL_MIN_BYTES", 0)
         big = r.read_all(parallel="auto")
         assert used_pool["n"] == 1, "auto must parallelize above the gate"

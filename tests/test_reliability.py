@@ -414,7 +414,13 @@ class TestWatchdog:
         return p, x, gate
 
     def test_read_all_degrades_to_serial_and_stays_bitwise(
-            self, tmp_path, clean_registry, fast_watchdog, caplog):
+            self, tmp_path, clean_registry, fast_watchdog, caplog,
+            monkeypatch):
+        # cold adaptive gate: parallel=True must actually engage the pool
+        # here (a warm policy may route a span this small to serial, which
+        # is correct serving behavior but not what this test exercises)
+        from repro.container import io as cio
+        monkeypatch.setattr(cio, "POOL_POLICY", cio.AdaptivePoolPolicy())
         p, x, _ = self._slow_container(tmp_path, delay=1.0, slow_on=3)
         with caplog.at_level(logging.WARNING, "repro.reliability"):
             with ContainerReader(p) as r:

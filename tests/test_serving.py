@@ -1,0 +1,506 @@
+"""Serving-layer suite: decoded-span cache, single-flight coalescing,
+partial reads, and the adaptive decode-pool gate (docs/serving.md).
+
+Invariants pinned here:
+
+* every served byte — cached, coalesced, sliced, raced — is bitwise
+  identical to a serial ``read_all`` of the same container;
+* N racing readers of one cold span cost exactly ONE decode;
+* the cache honors its byte budget at all times, evicts strict-LRU, and a
+  hot key survives arbitrarily many cold inserts;
+* ``read_range`` equals full-read slicing at every chunk-boundary shape;
+* the adaptive pool gate: cold = static prior, warm = measured-throughput
+  work threshold, pool-slower-than-serial demotion, env knob.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.container import ContainerReader, ContainerWriter
+from repro.container import io as cio
+from repro.data.shard_store import ShardStore
+from repro.serving import (
+    Request,
+    SingleFlight,
+    SpanCache,
+    TensorServer,
+    serve_one,
+    zipf_schedule,
+)
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+def _tensor(n=8192, seed=0):
+    rng = np.random.default_rng(seed)
+    return 1.0 + rng.integers(0, 1 << 20, n) / (1 << 22)
+
+
+@pytest.fixture
+def store_dir(tmp_path):
+    store = ShardStore(tmp_path)
+    raw = {}
+    for k, n in enumerate((8192, 12288, 4096)):
+        x = _tensor(n, seed=k)
+        store.write(f"t{k}", x, chunk=2048)
+        raw[f"t{k}"] = x
+    return tmp_path, raw
+
+
+# ---------------------------------------------------------------------------
+# partial reads: ContainerReader.read_range == read_all slicing
+# ---------------------------------------------------------------------------
+
+class TestPartialReads:
+    @pytest.fixture
+    def container(self, tmp_path):
+        x = _tensor(10240, seed=7)
+        p = tmp_path / "r.fpc"
+        with ContainerWriter(p, dtype=np.float64) as w:
+            for i in range(0, x.size, 2048):
+                w.append(x[i : i + 2048])
+        return p, x
+
+    @pytest.mark.parametrize("start,stop", [
+        (0, 10240),          # full range
+        (0, 0),              # empty at the left edge
+        (10240, 10240),      # empty at the right edge
+        (5, 5),              # empty mid-chunk
+        (0, 2048),           # exactly one chunk
+        (2048, 4096),        # exactly one interior chunk
+        (2047, 2049),        # straddles a chunk boundary
+        (100, 9000),         # multi-chunk, both ends mid-chunk
+        (10239, 10240),      # last element
+        (0, 1),              # first element
+    ])
+    def test_read_range_matches_slicing(self, container, start, stop):
+        p, x = container
+        with ContainerReader(p) as r:
+            got = r.read_range(start, stop)
+            assert np.array_equal(got.view(np.uint64),
+                                  x[start:stop].view(np.uint64))
+            # parallel paths are byte-identical too
+            forced = r.read_range(start, stop, parallel=True, workers=2)
+            assert np.array_equal(forced.view(np.uint64),
+                                  x[start:stop].view(np.uint64))
+
+    def test_read_range_defaults_to_end(self, container):
+        p, x = container
+        with ContainerReader(p) as r:
+            assert np.array_equal(r.read_range(300), x[300:])
+
+    def test_read_range_decodes_only_covering_chunks(self, container):
+        p, x = container
+        with ContainerReader(p) as r:
+            touched = []
+            real = r._record
+
+            def spy(i):
+                touched.append(i)
+                return real(i)
+
+            r._record = spy
+            got = r.read_range(2100, 4100)  # covered by chunks 1..2
+            assert sorted(set(touched)) == [1, 2]
+        assert np.array_equal(got, x[2100:4100])
+
+    def test_out_of_bounds_is_loud(self, container):
+        p, x = container
+        with ContainerReader(p) as r:
+            for start, stop in [(-1, 5), (0, x.size + 1), (7, 3),
+                                (x.size + 1, x.size + 1)]:
+                with pytest.raises(IndexError):
+                    r.read_range(start, stop)
+
+    def test_covering_chunks(self, container):
+        p, _ = container
+        with ContainerReader(p) as r:
+            assert r.covering_chunks(0, 2048) == (0, 1)
+            assert r.covering_chunks(2048, 2049) == (1, 2)
+            assert r.covering_chunks(2047, 2049) == (0, 2)
+            assert r.covering_chunks(0, 10240) == (0, 5)
+            assert r.covering_chunks(5, 5)[0] == r.covering_chunks(5, 5)[1]
+
+    def test_shard_store_read_slice(self, store_dir):
+        d, raw = store_dir
+        store = ShardStore(d)
+        for name, x in raw.items():
+            got = store.read_slice(name, 100, x.size - 57)
+            assert np.array_equal(got.view(np.uint64),
+                                  x[100 : x.size - 57].view(np.uint64))
+        assert np.array_equal(store.read_slice("t0", 500), raw["t0"][500:])
+
+
+# ---------------------------------------------------------------------------
+# span cache
+# ---------------------------------------------------------------------------
+
+class TestSpanCache:
+    def test_budget_is_honored_and_eviction_counted(self):
+        c = SpanCache(max_bytes=4 * 800)  # room for 4 100-elem f64 spans
+        for k in range(10):
+            c.put(("t", k), np.zeros(100))
+            assert c.bytes <= c.max_bytes
+        assert len(c) == 4
+        assert c.evictions == 6
+        assert c.stats()["insertions"] == 10
+
+    def test_hot_key_survives_cold_inserts(self):
+        c = SpanCache(max_bytes=4 * 800)
+        c.put(("hot", 0), np.zeros(100))
+        for k in range(64):
+            assert c.get(("hot", 0)) is not None  # refreshes recency
+            c.put(("cold", k), np.zeros(100))
+        assert ("hot", 0) in c
+
+    def test_oversize_value_served_not_cached(self):
+        c = SpanCache(max_bytes=100)
+        arr = np.zeros(1000)
+        assert c.put("big", arr) is False
+        assert c.oversize == 1
+        assert len(c) == 0 and c.bytes == 0
+        assert not arr.flags.writeable  # frozen regardless
+
+    def test_values_are_frozen(self):
+        c = SpanCache(max_bytes=1 << 20)
+        c.put("k", np.zeros(10))
+        got = c.get("k")
+        with pytest.raises(ValueError):
+            got[0] = 1.0
+
+    def test_replacement_accounts_bytes(self):
+        c = SpanCache(max_bytes=1 << 20)
+        c.put("k", np.zeros(100))
+        c.put("k", np.zeros(50))
+        assert c.bytes == 50 * 8 and len(c) == 1
+
+    def test_invalidate_and_zero_budget(self):
+        c = SpanCache(max_bytes=1 << 20)
+        c.put("k", np.zeros(10))
+        assert c.invalidate("k") and not c.invalidate("k")
+        assert c.bytes == 0
+        z = SpanCache(max_bytes=0)
+        assert z.put("k", np.zeros(10)) is False  # cache disabled
+
+    def test_concurrent_mutation_stays_bounded(self):
+        c = SpanCache(max_bytes=32 * 800)
+        errors = []
+
+        def worker(seed):
+            try:
+                rng = np.random.default_rng(seed)
+                for _ in range(300):
+                    k = int(rng.integers(0, 64))
+                    if rng.random() < 0.5:
+                        c.put(("k", k), np.zeros(100))
+                    else:
+                        got = c.get(("k", k))
+                        assert got is None or got.size == 100
+            except Exception as e:  # surfaced after join
+                errors.append(e)
+
+        threads = [threading.Thread(target=worker, args=(s,))
+                   for s in range(6)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+        assert c.bytes <= c.max_bytes
+        assert c.bytes == sum(800 for _ in c.keys())
+
+
+# ---------------------------------------------------------------------------
+# single-flight coalescing
+# ---------------------------------------------------------------------------
+
+class _Gated(TensorServer):
+    """Decode blocks on an event so racing readers deterministically pile
+    onto one flight before the leader finishes."""
+
+    def __init__(self, *a, **kw):
+        self.gate = threading.Event()
+        super().__init__(*a, **kw)
+
+    def _decode_span(self, name, lo, hi):
+        assert self.gate.wait(timeout=10)
+        return super()._decode_span(name, lo, hi)
+
+
+def _race(n_threads, fn):
+    errors, results = [], [None] * n_threads
+
+    def runner(k):
+        try:
+            results[k] = fn(k)
+        except BaseException as e:
+            errors.append(e)
+
+    threads = [threading.Thread(target=runner, args=(k,))
+               for k in range(n_threads)]
+    for t in threads:
+        t.start()
+    return threads, results, errors
+
+
+class TestCoalescing:
+    def test_n_racing_readers_one_decode(self, store_dir):
+        d, raw = store_dir
+        n = 6
+        with _Gated(d) as srv:
+            threads, results, errors = _race(n, lambda k: srv.read("t0"))
+            deadline = time.time() + 10
+            while (srv._flight.coalesced < n - 1
+                   and time.time() < deadline):
+                time.sleep(0.001)
+            srv.gate.set()
+            for t in threads:
+                t.join()
+            st = srv.stats()
+        assert not errors
+        assert st["decodes"] == 1, "N racing readers must share ONE decode"
+        assert st["coalesced"] == n - 1
+        for got in results:
+            assert np.array_equal(got.view(np.uint64),
+                                  raw["t0"].view(np.uint64))
+
+    def test_leader_exception_fails_whole_cohort_then_recovers(self,
+                                                               store_dir):
+        d, raw = store_dir
+        boom = {"on": True}
+
+        class Failing(_Gated):
+            def _decode_span(self, name, lo, hi):
+                assert self.gate.wait(timeout=10)
+                if boom["on"]:
+                    raise RuntimeError("injected decode failure")
+                return TensorServer._decode_span(self, name, lo, hi)
+
+        n = 4
+        with Failing(d) as srv:
+            threads, results, errors = _race(n, lambda k: srv.read("t1"))
+            deadline = time.time() + 10
+            while (srv._flight.coalesced < n - 1
+                   and time.time() < deadline):
+                time.sleep(0.001)
+            srv.gate.set()
+            for t in threads:
+                t.join()
+            assert len(errors) == n, "leader failure must fail every waiter"
+            assert all("injected" in str(e) for e in errors)
+            assert srv._flight.inflight() == 0  # entry cleaned up
+            boom["on"] = False
+            got = srv.read("t1")  # server recovers
+        assert np.array_equal(got.view(np.uint64), raw["t1"].view(np.uint64))
+
+    def test_single_flight_distinct_keys_do_not_serialize(self):
+        sf = SingleFlight()
+        order = []
+
+        def make(k, delay):
+            def fn():
+                time.sleep(delay)
+                order.append(k)
+                return k
+            return fn
+
+        _, results, errors = _race(
+            2, lambda k: sf.do(k, make(k, 0.1 if k == 0 else 0.0)))
+        for _ in range(100):
+            if all(r is not None for r in results):
+                break
+            time.sleep(0.01)
+        assert not errors
+        assert sf.leaders == 2 and sf.coalesced == 0
+
+
+# ---------------------------------------------------------------------------
+# tensor server end-to-end
+# ---------------------------------------------------------------------------
+
+class TestTensorServer:
+    def test_cached_and_uncached_match_serial_read_all(self, store_dir):
+        d, raw = store_dir
+        with TensorServer(d) as srv:
+            for name, x in raw.items():
+                first = srv.read(name)   # decode
+                again = srv.read(name)   # cache hit
+                assert srv.cache.hits > 0
+                for got in (first, again):
+                    assert np.array_equal(got.view(np.uint64),
+                                          x.view(np.uint64))
+                    assert not got.flags.writeable
+                sl = srv.read_slice(name, 50, 3000)
+                assert np.array_equal(sl.view(np.uint64),
+                                      x[50:3000].view(np.uint64))
+
+    def test_slice_of_cached_full_span_is_a_hit(self, store_dir):
+        d, raw = store_dir
+        with TensorServer(d) as srv:
+            srv.read("t0")
+            srv.reset_stats()
+            sl = srv.read_slice("t0", 0, raw["t0"].size)  # same covering span
+            st = srv.stats()
+        assert st["decodes"] == 0 and st["cache"]["hits"] == 1
+        assert np.array_equal(sl, raw["t0"])
+
+    def test_concurrent_stress_bitwise_under_eviction(self, store_dir):
+        """Many clients × mixed full/slice traffic against a cache too small
+        to hold the working set: constant eviction + coalescing races, every
+        response still bitwise-exact."""
+        d, raw = store_dir
+        sizes = {n: x.size for n, x in raw.items()}
+        total = sum(x.nbytes for x in raw.values())
+        sched = zipf_schedule(sizes, 240, slice_frac=0.6, seed=3)
+        with TensorServer(d, cache_bytes=total // 4) as srv:
+            def client(k):
+                for i in range(k, len(sched), 6):
+                    req = sched[i]
+                    got = serve_one(srv, req)
+                    want = (raw[req.name][req.start : req.stop]
+                            if req.is_slice else raw[req.name])
+                    if not np.array_equal(got.reshape(-1).view(np.uint64),
+                                          want.reshape(-1).view(np.uint64)):
+                        raise AssertionError(f"bitwise mismatch for {req}")
+                return True
+
+            threads, results, errors = _race(6, client)
+            for t in threads:
+                t.join()
+            st = srv.stats()
+        assert not errors
+        assert all(results)
+        assert st["cache"]["evictions"] > 0, (
+            "stress must actually churn the cache")
+        assert srv.cache.bytes <= srv.cache.max_bytes
+
+    def test_disabled_cache_decodes_every_request(self, store_dir):
+        d, raw = store_dir
+        with TensorServer(d, cache_bytes=0) as srv:
+            for _ in range(3):
+                srv.read("t0")
+            st = srv.stats()
+        assert st["decodes"] == 3
+        assert st["cache"]["hits"] == 0
+
+    def test_invalidate_refreshes_rewritten_shard(self, store_dir):
+        d, raw = store_dir
+        store = ShardStore(d)
+        with TensorServer(d) as srv:
+            old = srv.read("t2")
+            new = _tensor(4096, seed=99)
+            store.write("t2", new, chunk=2048)
+            assert np.array_equal(srv.read("t2"), old), (
+                "pre-invalidate reads serve the cached generation")
+            srv.invalidate("t2")
+            got = srv.read("t2")
+        assert np.array_equal(got.view(np.uint64), new.view(np.uint64))
+
+    def test_closed_server_is_loud(self, store_dir):
+        d, _ = store_dir
+        srv = TensorServer(d)
+        srv.read("t0")
+        srv.close()
+        with pytest.raises(RuntimeError, match="closed"):
+            srv.read("t1")
+
+    def test_meta_and_names(self, store_dir):
+        d, raw = store_dir
+        with TensorServer(d) as srv:
+            assert srv.names() == sorted(raw)
+            assert srv.meta("t0")["shape"] == [raw["t0"].size]
+            assert srv.n_elements("t1") == raw["t1"].size
+
+    def test_request_helpers(self):
+        assert Request("a").is_slice is False
+        assert Request("a", 1, 2).is_slice is True
+        sched = zipf_schedule({"a": 100, "b": 100}, 50, seed=0)
+        assert sched == zipf_schedule({"a": 100, "b": 100}, 50, seed=0), (
+            "schedules must be deterministic: the bench gates their "
+            "counters exactly")
+        for req in sched:
+            if req.is_slice:
+                assert 0 <= req.start < req.stop <= 100
+
+
+# ---------------------------------------------------------------------------
+# adaptive decode-pool policy
+# ---------------------------------------------------------------------------
+
+class TestAdaptivePolicy:
+    def test_cold_falls_back_to_static_prior(self):
+        pol = cio.AdaptivePoolPolicy()
+        assert pol.should_parallel(cio.PARALLEL_MIN_BYTES) is True
+        assert pol.should_parallel(cio.PARALLEL_MIN_BYTES - 1) is False
+        assert pol.should_parallel(1, forced=True) is True
+
+    def test_warm_gate_uses_measured_throughput(self):
+        pol = cio.AdaptivePoolPolicy()
+        for _ in range(pol.MIN_SAMPLES):
+            pol.record("serial", 1_000_000, 1_000.0)  # 1000 bytes/us
+        thresh = cio.pool_min_work_us()
+        # span below the work threshold: serial, even when forced
+        below = int(1_000 * thresh) - 1_000
+        assert pol.should_parallel(below) is False
+        assert pol.should_parallel(below, forced=True) is False
+        above = int(1_000 * thresh) * 4
+        assert pol.should_parallel(above) is True
+
+    def test_pool_slower_than_serial_demotes_auto_not_forced(self):
+        pol = cio.AdaptivePoolPolicy()
+        for _ in range(pol.MIN_SAMPLES):
+            pol.record("serial", 1_000_000, 1_000.0)
+        pol.record("parallel", 1_000_000, 2_000.0)  # pool is 2x slower
+        big = 1_000 * int(cio.pool_min_work_us()) * 4
+        assert pol.should_parallel(big) is False, (
+            "a host whose pool measures slower than serial must demote auto")
+        assert pol.should_parallel(big, forced=True) is True
+
+    def test_env_knob_overrides_work_threshold(self, monkeypatch):
+        pol = cio.AdaptivePoolPolicy()
+        for _ in range(pol.MIN_SAMPLES):
+            pol.record("serial", 1_000_000, 1_000.0)
+        monkeypatch.setenv("REPRO_POOL_MIN_WORK_US", "10")
+        assert pol.should_parallel(1_000 * 50) is True
+        monkeypatch.setenv("REPRO_POOL_MIN_WORK_US", "1000000")
+        assert pol.should_parallel(1_000 * 50) is False
+
+    def test_ewma_tracks_shift(self):
+        pol = cio.AdaptivePoolPolicy()
+        pol.record("serial", 1000, 1.0)
+        for _ in range(50):
+            pol.record("serial", 4000, 1.0)
+        assert abs(pol.throughput("serial") - 4000) < 100
+
+    def test_degenerate_samples_ignored(self):
+        pol = cio.AdaptivePoolPolicy()
+        pol.record("serial", 0, 1.0)
+        pol.record("serial", 100, 0.0)
+        assert pol.samples("serial") == 0
+
+    def test_reads_feed_the_policy(self, tmp_path, monkeypatch):
+        pol = cio.AdaptivePoolPolicy()
+        monkeypatch.setattr(cio, "POOL_POLICY", pol)
+        x = _tensor(6144, seed=5)
+        p = tmp_path / "f.fpc"
+        with ContainerWriter(p, dtype=np.float64) as w:
+            for i in range(0, x.size, 2048):
+                w.append(x[i : i + 2048])
+        with ContainerReader(p) as r:
+            r.read_all()
+            assert pol.samples("serial") == 1
+            r.read_all(parallel=True, workers=2)  # forced dedicated pool
+            assert pol.samples("parallel") == 1
+            got = r.read_all(parallel="auto")
+        assert np.array_equal(got.view(np.uint64), x.view(np.uint64))
+        assert sum(pol.decisions.values()) >= 1
+
+    def test_decisions_counter(self):
+        pol = cio.AdaptivePoolPolicy()
+        pol.should_parallel(1)
+        pol.should_parallel(1 << 30)
+        assert pol.decisions == {"serial": 1, "parallel": 1}
+        pol.reset()
+        assert pol.decisions == {"serial": 0, "parallel": 0}

@@ -1,0 +1,110 @@
+"""Docs-consistency gate (CI lint job): fail loud when docs drift from code.
+
+Three checks, stdlib only, no network:
+
+1. **Knob parity** — every ``REPRO_*`` environment variable referenced in
+   ``src/**/*.py`` must have a row in the authoritative table in
+   ``docs/knobs.md``, and every row there must still exist in the source.
+   A knob added without docs, or docs for a deleted knob, both fail.
+2. **Link integrity** — every relative markdown link in ``README.md`` and
+   ``docs/*.md`` must resolve to an existing file (``http(s)``/``mailto``
+   skipped, ``#anchors`` stripped).
+3. **Doc index** — every ``docs/*.md`` must be reachable from the index in
+   ``docs/architecture.md`` so no page is orphaned.
+
+Usage:  python tools/check_docs.py   (exit 0 = consistent, 1 = drift)
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+KNOB_RE = re.compile(r"\bREPRO_[A-Z0-9_]+\b")
+# [text](target) — excludes images by allowing them too (same resolution rule)
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def knobs_in_source() -> set[str]:
+    found: set[str] = set()
+    for p in sorted((ROOT / "src").rglob("*.py")):
+        found |= set(KNOB_RE.findall(p.read_text()))
+    return found
+
+
+def knobs_in_table(doc: Path) -> set[str]:
+    """Knobs documented as rows of the markdown table in docs/knobs.md
+    (first cell of each row, backtick-wrapped)."""
+    rows: set[str] = set()
+    for line in doc.read_text().splitlines():
+        m = re.match(r"\|\s*`(REPRO_[A-Z0-9_]+)`", line)
+        if m:
+            rows.add(m.group(1))
+    return rows
+
+
+def check_knobs(errors: list[str]) -> None:
+    table = ROOT / "docs" / "knobs.md"
+    if not table.exists():
+        errors.append("docs/knobs.md is missing (authoritative knob table)")
+        return
+    src = knobs_in_source()
+    doc = knobs_in_table(table)
+    for k in sorted(src - doc):
+        errors.append(f"knob {k} used in src/ but has no row in docs/knobs.md")
+    for k in sorted(doc - src):
+        errors.append(f"docs/knobs.md documents {k}, which no longer "
+                      f"appears anywhere in src/")
+
+
+def check_links(errors: list[str]) -> None:
+    pages = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+    for page in pages:
+        if not page.exists():
+            errors.append(f"{page.relative_to(ROOT)} is missing")
+            continue
+        for target in LINK_RE.findall(page.read_text()):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (page.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(
+                    f"{page.relative_to(ROOT)}: broken link -> {target}")
+
+
+def check_doc_index(errors: list[str]) -> None:
+    index = ROOT / "docs" / "architecture.md"
+    if not index.exists():
+        errors.append("docs/architecture.md is missing (doc index)")
+        return
+    text = index.read_text()
+    for page in sorted((ROOT / "docs").glob("*.md")):
+        if page.name == "architecture.md":
+            continue
+        if page.name not in text:
+            errors.append(
+                f"docs/{page.name} is not linked from docs/architecture.md")
+
+
+def main() -> int:
+    errors: list[str] = []
+    check_knobs(errors)
+    check_links(errors)
+    check_doc_index(errors)
+    if errors:
+        print(f"docs drift: {len(errors)} problem(s)", file=sys.stderr)
+        for e in errors:
+            print(f"  - {e}", file=sys.stderr)
+        return 1
+    n = len(knobs_in_source())
+    print(f"docs consistent: {n} knobs in parity, all links resolve, "
+          f"doc index complete")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
