@@ -283,6 +283,103 @@ def bench_container(rows: list, n_elems: int = 100_000):
                 x.nbytes)
 
 
+def bench_streaming(rows: list, n_elems: int = 100_000):
+    """Bounded-memory streaming ingest (core/streaming + data/dataset).
+
+    Two rows + deterministic counters:
+
+    * ``streaming_write_{tag}`` — ShardStore.write_stream throughput over a
+      generator of ragged pieces (re-chunk + window policy + write-behind).
+    * ``dataset_stream_4x_budget`` — a FRESH subprocess (ru_maxrss is
+      lifetime-monotonic, so the parent process can't measure its own
+      delta) streams a dataset 4× larger than the RAM budget and reports
+      peak-RSS growth; the budget is asserted IN-BENCH — a regression that
+      materializes the stream fails the bench, not just drifts a number.
+    * ``stream_*`` counts — WindowPlanner decisions on a seeded drifting
+      stream, compared exactly by the CI gate (the drift-refresh policy is
+      deterministic; a changed count means a changed policy).
+    """
+    import subprocess
+    import sys
+    import tempfile
+
+    from repro.core import streaming as S
+    from repro.core.float_bits import F64
+    from repro.data.shard_store import ShardStore
+
+    tag = f"{n_elems // 1000}k"
+    x = gas_turbine_emissions(n_elems)
+    chunk = max(2048, min(32_768, n_elems // 4))
+    piece = max(1, (n_elems // 7) | 1)  # ragged on purpose
+
+    with tempfile.TemporaryDirectory() as d:
+        store = ShardStore(d)
+
+        def write():
+            pieces = (x[i * piece : (i + 1) * piece]
+                      for i in range(-(-x.size // piece)))
+            store.write_stream("bench", pieces, np.float64, chunk=chunk)
+
+        us = _timeit(write)
+        _record(rows, f"streaming_write_{tag}", us,
+                f"ragged-pieces chunk={chunk // 1024}k write-behind",
+                x.nbytes)
+
+    # window-policy decision counters: seeded drifting stream, 16 chunks of
+    # 8192 elems with a distribution jump halfway — counts are a pure
+    # function of the data and the policy, so the gate compares them exactly
+    rng = np.random.default_rng(1234)
+    base = 1.0 + rng.integers(0, 1 << 12, 8192 * 16) / float(1 << 14)
+    base[8192 * 8 :] = base[8192 * 8 :] * 4096.0 + 3.0
+    planner = S.WindowPlanner(spec=F64, probe_elems=1024,
+                              probe_threshold=4096,
+                              window_bytes=8192 * 8 * 2)  # every 2 chunks
+    for i in range(16):
+        planner.encode(base[i * 8192 : (i + 1) * 8192])
+    for key, val in planner.stats.items():
+        _counts[f"stream_{key}"] = val
+
+    # 4x-budget bounded-memory proof: subprocess streams `logical` bytes of
+    # f64 through a DatasetWriter under a `budget = logical / 4` ceiling
+    logical = (16 << 20) if n_elems <= 10_000 else (64 << 20)
+    child = (
+        "import json, resource, sys, tempfile\n"
+        "import numpy as np\n"
+        "from repro.data.dataset import DatasetWriter\n"
+        "logical = int(sys.argv[1]); budget = logical // 4\n"
+        "piece = 1 << 16\n"
+        "def pieces(n):\n"
+        "    for i in range(n):\n"
+        "        yield 1.0 + np.arange(piece, dtype=np.float64) / (i + 2.0)\n"
+        "with tempfile.TemporaryDirectory() as d:\n"
+        "    DatasetWriter(d + '/warm', dtype=np.float64,\n"
+        "                  chunk=1 << 14).write(pieces(2))\n"
+        "    rss0 = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024\n"
+        "    import time; t0 = time.time()\n"
+        "    DatasetWriter(d + '/ds', dtype=np.float64, chunk=1 << 14,\n"
+        "                  part_elems=1 << 18, method='identity'\n"
+        "                  ).write(pieces(logical // (piece * 8)))\n"
+        "    us = (time.time() - t0) * 1e6\n"
+        "    rss1 = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024\n"
+        "print(json.dumps({'us': us, 'rss_delta': rss1 - rss0,\n"
+        "                  'budget': budget}))\n"
+    )
+    r = subprocess.run([sys.executable, "-c", child, str(logical)],
+                       capture_output=True, text=True, timeout=600,
+                       env=dict(os.environ))
+    assert r.returncode == 0, f"4x-budget child failed:\n{r.stderr}"
+    stats = json.loads(r.stdout.strip().splitlines()[-1])
+    assert stats["rss_delta"] < stats["budget"], (
+        f"streaming a {logical >> 20} MiB dataset grew RSS by "
+        f"{stats['rss_delta'] >> 20} MiB — over the "
+        f"{stats['budget'] >> 20} MiB budget; ingestion is not bounded"
+    )
+    _record(rows, "dataset_stream_4x_budget", stats["us"],
+            f"rss+{stats['rss_delta'] >> 20}MiB<"
+            f"{stats['budget'] >> 20}MiB logical={logical >> 20}MiB",
+            logical)
+
+
 def bench_shard_prefetch(rows: list, n_elems: int = 100_000):
     """Prefetched shard iteration vs lazy iteration: the data-path consumer
     of the prefetching reader (`ShardStore.iter_chunks`)."""
@@ -421,6 +518,7 @@ def run(rows: list, smoke: bool = False):
     if smoke:
         bench_transforms(rows, n_elems=10_000)
         bench_container(rows, n_elems=10_000)
+        bench_streaming(rows, n_elems=10_000)
         bench_shard_prefetch(rows, n_elems=10_000)
         bench_rans(rows, n_elems=10_000)
         bench_gd(rows)
@@ -430,6 +528,7 @@ def run(rows: list, smoke: bool = False):
     else:
         bench_transforms(rows)
         bench_container(rows)
+        bench_streaming(rows)
         bench_shard_prefetch(rows)
         bench_rans(rows)
         bench_gd(rows)

@@ -34,7 +34,7 @@ import numpy as np
 from ..container import ContainerError, ContainerReader, ContainerWriter
 from ..container.format import dtype_name as _dtype_name, resolve_dtype
 from ..container.io import in_decode_pool, shared_decode_pool
-from ..core import plans as plans_mod
+from ..core import plans as plans_mod, streaming as _streaming
 from ..reliability import durable as _durable
 
 log = logging.getLogger("repro.reliability")
@@ -171,9 +171,11 @@ def save_tree(tree, directory: str | Path, extra: dict | None = None,
                 kw = {"candidates": _CKPT_CANDIDATES}
         with ContainerWriter(tmp / f"arr_{i}.fpc", dtype=arr.dtype,
                              method=leaf_method, **kw) as w:
-            flat = arr.reshape(-1)
-            for s in range(0, flat.size, CHUNK):
-                w.append(flat[s : s + CHUNK])
+            # write-behind: chunk encode overlaps record I/O on the shared
+            # streaming pump (bytes identical to the per-chunk append loop)
+            _streaming.stream_chunks(
+                w, _streaming.iter_fixed_chunks((arr.reshape(-1),), CHUNK,
+                                                dtype=arr.dtype))
             chunks = w.chunks
             kind = w.kind
         if method == "auto" and dtn not in tree_picks and w._picked:

@@ -44,7 +44,8 @@ METHOD_IDS = {
 RAW_METHOD_ID = 255      # non-float payload: backend-compressed raw bytes
 METHOD_NAMES = {v: k for k, v in METHOD_IDS.items()}
 
-_SPEC_DTYPES = {"f64": "float64", "f32": "float32", "bf16": "bfloat16"}
+_SPEC_DTYPES = {"f64": "float64", "f32": "float32", "bf16": "bfloat16",
+                "f16": "float16"}
 
 # sanity bound for any single length field (1 TiB); a corrupt length must
 # fail loudly instead of triggering a huge allocation

@@ -35,21 +35,21 @@ from pathlib import Path
 
 import numpy as np
 
-from ..core import pipeline, transforms as T
-from ..core.float_bits import BF16, F32, F64
+from ..core import pipeline, streaming as _streaming
+from ..core.float_bits import BF16, F16, F32, F64
 from ..reliability import durable as _durable, faults as _faults, watchdog as _watchdog
 from . import format as F
 from .backends import ContainerError, get_backend
 
-_FLOAT_SPECS = {"float64": F64, "float32": F32, "bfloat16": BF16}
-_SPEC_NAMES = {"float64": "f64", "float32": "f32", "bfloat16": "bf16"}
+_FLOAT_SPECS = {"float64": F64, "float32": F32, "float16": F16, "bfloat16": BF16}
+_SPEC_NAMES = {"float64": "f64", "float32": "f32", "float16": "f16", "bfloat16": "bf16"}
 
-# selection probe: arrays at or below the threshold run full auto per chunk
-# (cheap at that size); larger streams are probed once on a strided sample
-# and every chunk reuses the picked transform (the §Perf C policy that used
-# to live, duplicated, in checkpoint/manager.py and data/shard_store.py).
-PROBE_ELEMS = 8192
-PROBE_THRESHOLD = 16384
+# selection probe geometry: the policy itself (probe once on the first
+# sizeable chunk, reuse per chunk-window with fingerprint-drift refresh)
+# lives in core/streaming.WindowPlanner; these re-exports keep the writer's
+# historical constants importable from here.
+PROBE_ELEMS = _streaming.PROBE_ELEMS
+PROBE_THRESHOLD = _streaming.PROBE_THRESHOLD
 
 # -- shared decode pool ------------------------------------------------------
 #
@@ -248,7 +248,17 @@ class ContainerWriter:
             if plan.backend != self._backend.name:
                 plan = dataclasses.replace(plan, backend=self._backend.name)
             self._plan = plan
-        self._picked: tuple[str, dict | None] | None = None
+        # selection policy (probe-once + per-window plan reuse with
+        # fingerprint-drift refresh) is delegated to the shared streaming
+        # core; raw-path containers have no float policy to run
+        self._planner = None
+        if self._spec is not None:
+            self._planner = _streaming.WindowPlanner(
+                spec=self._spec, backend=self._backend.name, method=method,
+                params=params, candidates=self._candidates, plan=self._plan,
+                probe_elems=probe_elems, probe_threshold=probe_threshold,
+                fallback_identity=fallback_identity,
+            )
         self._entries: list[dict] = []
         self._chunks: list[dict] = []
         self._closed = False
@@ -295,49 +305,20 @@ class ContainerWriter:
         self._chunks.append(info)
         return info
 
-    # -- encoding policy ----------------------------------------------------
-
-    def _encode(self, flat: np.ndarray) -> pipeline.Encoded:
-        name, prm = self._method, self._params
-        if self._plan is not None and name == "auto":
-            # pre-built plan: pure phase-2 encode — no probe, no phase-1
-            # dispatches; a chunk the winner rejects walks the plan's own
-            # ranked fallbacks and terminally lands on identity (verified)
-            return pipeline.encode_with_plan(flat, self._plan)
-        if name == "auto":
-            if self._picked is None and flat.size > self._probe_threshold:
-                # ceil-strided so the probe spans the whole chunk (same
-                # sampling the selection engine itself uses)
-                sample = pipeline._strided(flat, self._probe_elems)
-                try:
-                    # the writer's backend is the compressor every chunk
-                    # payload will feed — selection sizes candidates with it
-                    self._picked = pipeline.select_method(
-                        sample, candidates=self._candidates, spec=self._spec,
-                        backend=self._backend.name, use_cache=True,
-                    )
-                except T.TransformError:
-                    self._picked = ("auto", None)
-            name, prm = self._picked or ("auto", None)
-        try:
-            if name == "auto":
-                return pipeline.encode(
-                    flat, method="auto", candidates=self._candidates,
-                    spec=self._spec, backend=self._backend.name,
-                )
-            return pipeline.apply_transform(flat, name, prm, spec=self._spec,
-                                            backend=self._backend.name)
-        except Exception:
-            if not self._fallback_identity:
-                raise
-            # picked transform rejected this chunk's data: lossless fallback
-            return pipeline.apply_transform(flat, "identity", spec=self._spec,
-                                            backend=self._backend.name)
-
     # -- public API ---------------------------------------------------------
 
-    def append(self, chunk) -> dict:
-        """Encode + serialize one chunk; returns {method, raw, comp}.
+    @property
+    def _picked(self) -> tuple[str, dict | None] | None:
+        """The probe's (method, params) pick, None before any probe (or on
+        the raw path) — readable after close (checkpoint reuses it)."""
+        return self._planner.picked if self._planner is not None else None
+
+    def encode_record(self, chunk) -> tuple[bytes, int, str]:
+        """The CPU half of ``append``: validate + encode + serialize one
+        chunk to ``(record_bytes, n, method)`` with NO file I/O.  The
+        streaming pump (:func:`repro.core.streaming.stream_chunks`) runs
+        this on the producer thread while ``_write_record`` drains on the
+        write-behind thread; ``append`` is the composition of the two.
 
         Device arrays (anything exposing ``.dtype``/``.size``) are accepted
         without an eager ``np.asarray``: the encode path decides when (and
@@ -357,10 +338,14 @@ class ContainerWriter:
             )
         if self._spec is None:
             rec = F.serialize_raw_chunk(chunk, self._backend)
-            return self._write_record(rec, chunk.size, "raw")
-        enc = self._encode(chunk)
+            return rec, int(chunk.size), "raw"
+        enc = self._planner.encode(chunk)
         rec = F.serialize_chunk(enc, self._backend)
-        return self._write_record(rec, int(chunk.size), enc.method)
+        return rec, int(chunk.size), enc.method
+
+    def append(self, chunk) -> dict:
+        """Encode + serialize + write one chunk; returns {method, raw, comp}."""
+        return self._write_record(*self.encode_record(chunk))
 
     def append_encoded(self, enc: pipeline.Encoded) -> dict:
         """Serialize an already-encoded chunk (must match the container spec)."""
@@ -373,6 +358,15 @@ class ContainerWriter:
             )
         rec = F.serialize_chunk(enc, self._backend)
         return self._write_record(rec, enc.n, enc.method)
+
+    def update_user_meta(self, extra: dict) -> None:
+        """Merge keys into the container's user metadata.  The index (which
+        carries user_meta) is only written at ``close()``, so streaming
+        callers may record stream-dependent facts — e.g. the final logical
+        shape — after the last chunk, before closing."""
+        if self._closed:
+            raise ContainerError("writer is closed")
+        self._user_meta.update(extra)
 
     @property
     def chunks(self) -> list[dict]:

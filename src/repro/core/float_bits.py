@@ -26,6 +26,11 @@ class FloatSpec:
 
     @property
     def float_dtype(self):
+        # two 16-bit formats share a width, so the float dtype is keyed by
+        # name there; the integer views below stay width-keyed (both use
+        # uint16/int16 bit containers)
+        if self.name == "f16":
+            return jnp.float16
         return {64: jnp.float64, 32: jnp.float32, 16: jnp.bfloat16}[self.width]
 
     @property
@@ -60,11 +65,13 @@ class FloatSpec:
 F64 = FloatSpec(name="f64", width=64, man_bits=52, exp_bits=11, bias=1023)
 F32 = FloatSpec(name="f32", width=32, man_bits=23, exp_bits=8, bias=127)
 BF16 = FloatSpec(name="bf16", width=16, man_bits=7, exp_bits=8, bias=127)
+F16 = FloatSpec(name="f16", width=16, man_bits=10, exp_bits=5, bias=15)
 
 _SPEC_BY_DTYPE = {
     jnp.dtype(jnp.float64): F64,
     jnp.dtype(jnp.float32): F32,
     jnp.dtype(jnp.bfloat16): BF16,
+    jnp.dtype(jnp.float16): F16,
 }
 
 

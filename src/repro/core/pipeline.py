@@ -49,6 +49,7 @@ from . import scoring as S
 from . import transforms as T
 from .float_bits import (
     BF16,
+    F16,
     F32,
     F64,
     FloatSpec,
@@ -59,7 +60,7 @@ from .float_bits import (
 )
 from .lossless import from_significand_int, significand_int
 
-SPECS = {"f64": F64, "f32": F32, "bf16": BF16}
+SPECS = {"f64": F64, "f32": F32, "bf16": BF16, "f16": F16}
 
 DEFAULT_CANDIDATES = (
     ("identity", {}),

@@ -1,1 +1,3 @@
 from .synthetic import chicago_taxi_fares, gas_turbine_emissions, DATASETS  # noqa: F401
+from .dataset import DatasetError, DatasetReader, DatasetWriter  # noqa: F401
+from .shard_store import ShardStore  # noqa: F401

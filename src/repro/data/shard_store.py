@@ -19,7 +19,8 @@ from pathlib import Path
 import numpy as np
 
 from ..container import ContainerReader, ContainerWriter
-from ..container.format import resolve_dtype
+from ..container.format import dtype_name, resolve_dtype
+from ..core import streaming as _streaming
 
 
 class ShardStore:
@@ -36,7 +37,70 @@ class ShardStore:
         readers over it instead of re-opening per call)."""
         return self._path(name)
 
-    def write(self, name: str, x: np.ndarray, chunk: int = 65536,
+    def _write_chunks(self, name, chunks, dtype, shape, chunk, method,
+                      durable, plan) -> dict:
+        """Pump pre-chunked flat arrays into one durable shard container
+        with write-behind (encode overlaps file I/O, memory stays
+        O(chunk · queue-depth) — never O(shard))."""
+        dtn = dtype_name(dtype)
+        total = 0
+
+        def counted():
+            nonlocal total
+            for c in chunks:
+                total += int(c.size)
+                yield c
+
+        with ContainerWriter(
+            self._path(name),
+            dtype=dtype,
+            backend=self.backend,
+            method=method,
+            durable=durable,
+            plan=plan,
+            user_meta={"dtype": dtn, "chunk": chunk},
+        ) as w:
+            n = _streaming.stream_chunks(w, counted())
+            if n == 0:
+                # an empty shard still carries one (empty) chunk, exactly
+                # as the one-shot writer always has
+                w.append(np.empty(0, resolve_dtype(dtn)))
+            if shape is None:
+                shape = [total]
+            elif int(np.prod(shape)) != total:
+                raise ValueError(
+                    f"stream produced {total} elements but the declared "
+                    f"shape {list(shape)} holds {int(np.prod(shape))}"
+                )
+            # the index (carrying user_meta) is written at close, so the
+            # stream-dependent shape can land after the last chunk
+            w.update_user_meta({"shape": list(shape)})
+            sizes = w.chunks
+        return {
+            "dtype": dtn,
+            "shape": list(shape),
+            "chunk": chunk,
+            "chunks": sizes,
+        }
+
+    def write_stream(self, name: str, pieces, dtype, shape=None,
+                     chunk: int = 65536, method: str = "auto",
+                     durable: bool = True, plan=None) -> dict:
+        """Stream arbitrarily large data into one shard under a fixed RAM
+        budget: ``pieces`` is any iterable of array-likes (a generator
+        streams), re-chunked to the container's fixed geometry by view
+        where possible and encoded with write-behind — peak memory is
+        O(chunk + piece + queue·record) regardless of total size.
+
+        ``shape`` defaults to the flat ``[total]``; when given, it must
+        account for exactly the streamed elements.  Same durability,
+        selection and ``plan`` semantics as :meth:`write`."""
+        return self._write_chunks(
+            name, _streaming.iter_fixed_chunks(pieces, chunk, dtype=dtype),
+            dtype, shape, chunk, method, durable, plan,
+        )
+
+    def write(self, name: str, x, chunk: int = 65536,
               method: str = "auto", durable: bool = True,
               plan=None) -> dict:
         """Write one shard **atomically and durably**: bytes stage to a
@@ -46,34 +110,25 @@ class ShardStore:
         shard bitwise intact (tests/test_reliability.py,
         tests/test_crash_matrix.py).
 
+        Device arrays are sliced chunk-by-chunk *on device* — never
+        materialized whole on the host — so the fused rans-backend encode
+        keeps each chunk device-resident and peak host memory stays
+        O(chunk), not O(shard).  For unbounded inputs see
+        :meth:`write_stream`.
+
         ``plan`` (a :class:`repro.core.plans.EncodePlan`) skips the writer's
         selection probe entirely — every chunk encodes phase-2-only through
         the plan's winner/fallback order (docs/plans.md), the right call
         when many shards share one distribution."""
-        flat = np.ascontiguousarray(x).reshape(-1)
-        nchunks = max(1, -(-flat.size // chunk))
-        with ContainerWriter(
-            self._path(name),
-            dtype=x.dtype,
-            backend=self.backend,
-            method=method,
-            durable=durable,
-            plan=plan,
-            user_meta={
-                "dtype": str(x.dtype),
-                "shape": list(x.shape),
-                "chunk": chunk,
-            },
-        ) as w:
-            for i in range(nchunks):
-                w.append(flat[i * chunk : (i + 1) * chunk])
-            sizes = w.chunks
-        return {
-            "dtype": str(x.dtype),
-            "shape": list(x.shape),
-            "chunk": chunk,
-            "chunks": sizes,
-        }
+        if not isinstance(x, np.ndarray) and hasattr(x, "dtype"):
+            xf = x.reshape(-1)
+            chunks = (xf[s : s + chunk] for s in range(0, int(xf.size), chunk))
+            return self._write_chunks(name, chunks, x.dtype, list(x.shape),
+                                      chunk, method, durable, plan)
+        x = np.asarray(x)
+        return self.write_stream(name, (x,), x.dtype, shape=list(x.shape),
+                                 chunk=chunk, method=method, durable=durable,
+                                 plan=plan)
 
     def manifest(self, name: str) -> dict:
         with ContainerReader(self._path(name)) as r:

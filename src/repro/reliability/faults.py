@@ -9,6 +9,11 @@ parameters alone.  Three families:
   point hard-kills the process with ``SIGKILL`` — the closest in-process
   approximation of a power cut / OOM-kill for the crash-matrix tests.
   Disarmed (the default), a crash point is one ``is None`` check.
+  Points in the tree today: ``durable.staged|synced|replaced``,
+  ``container.append``, ``checkpoint.staged|committed``, and the dataset
+  writer's two-phase part commit ``dataset.commit|manifest``
+  (``data/dataset.py`` — between a part's durable rename and the manifest
+  write naming it, and right after that manifest write).
 * **Faulty files** — :class:`FaultyFile` wraps a real file object and makes
   its Nth ``write`` fail: short write then ``ENOSPC``, a raised exception,
   or injected latency.

@@ -31,6 +31,7 @@ import numpy as np
 
 from ..container import ContainerReader
 from ..container.format import resolve_dtype
+from ..data.dataset import DatasetReader
 from ..data.shard_store import ShardStore
 from .cache import SpanCache
 from .coalesce import SingleFlight
@@ -66,16 +67,27 @@ class TensorServer:
         return self._store.root
 
     def names(self) -> list[str]:
-        """Tensors currently present in the store directory."""
-        return sorted(p.stem for p in self.root.glob("*.fpc"))
+        """Tensors currently present in the store directory: single-shard
+        containers and multi-part dataset directories alike."""
+        return sorted({p.stem for p in self.root.glob("*.fpc")}
+                      | {p.parent.name
+                         for p in self.root.glob("*/manifest.json")})
 
-    def _reader(self, name: str) -> ContainerReader:
+    def _reader(self, name: str):
         with self._readers_lock:
             if self._closed:
                 raise RuntimeError("TensorServer is closed")
             r = self._readers.get(name)
             if r is None:
-                r = ContainerReader(self._store.path(name))
+                path = self._store.path(name)
+                if (not path.exists()
+                        and (self.root / name / "manifest.json").exists()):
+                    # a resumable multi-part dataset (data.dataset): its
+                    # reader speaks the ContainerReader serving protocol, so
+                    # the cache/coalesce/span machinery below is unchanged
+                    r = DatasetReader(self.root / name)
+                else:
+                    r = ContainerReader(path)
                 self._readers[name] = r
             return r
 

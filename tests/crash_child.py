@@ -45,11 +45,27 @@ def write_checkpoint(dest, version):
     mgr.save(version, {"w": payload(version), "b": payload(version)[:64]})
 
 
+def write_dataset(dest, version):
+    # multi-part resumable dataset (4 parts at chunk=128 / part_elems=256).
+    # A completed dataset is immutable, so this surface has no v2 rewrite:
+    # the armed run is the FIRST write and the parent resumes it in-process
+    # (tests/test_streaming.py), asserting committed parts survive bitwise.
+    from repro.data.dataset import DatasetWriter
+
+    w = DatasetWriter(dest / "ds", dtype=np.float64, chunk=128,
+                      part_elems=256, method="identity")
+    w.write([payload(version)])
+
+
 WRITERS = {
     "container": write_container,
     "shard": write_shard,
     "checkpoint": write_checkpoint,
+    "dataset": write_dataset,
 }
+
+# surfaces whose destination cannot be overwritten: skip the clean v1 pass
+SINGLE_WRITE = {"dataset"}
 
 
 def main() -> int:
@@ -58,12 +74,16 @@ def main() -> int:
     from repro.reliability import faults
 
     surface, dest, point = sys.argv[1], Path(sys.argv[2]), sys.argv[3]
+    # "name:N" arms the Nth hit (boundaries inside loops, e.g. the dataset
+    # writer's per-part commit); bare names keep the first-hit default
+    name, _, k = point.partition(":")
     write = WRITERS[surface]
     faults.set_crash_plan(None)
-    write(dest, 1)
+    if surface not in SINGLE_WRITE:
+        write(dest, 1)
     if point != "none":
-        faults.set_crash_plan(point)  # counters reset; first hit is in v2
-    write(dest, 2)  # SIGKILL fires somewhere in here when armed
+        faults.set_crash_plan(name, int(k or 1))  # counters reset
+    write(dest, 2 if surface not in SINGLE_WRITE else 1)
     return 0
 
 
